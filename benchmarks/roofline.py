@@ -1,0 +1,59 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSON.
+
+    PYTHONPATH=src python -m benchmarks.roofline dryrun_single.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch.roofline import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+
+def fmt_bytes(x):
+    return f"{x/1e9:.2f}GB" if x >= 1e9 else f"{x/1e6:.1f}MB"
+
+
+def render(path: str) -> str:
+    with open(path) as f:
+        report = json.load(f)
+    rows = []
+    header = ("| arch | shape | mesh | compute_s | memory_s | collective_s |"
+              " dominant | roofline_frac | useful_ratio | peak_HBM/dev |")
+    sep = "|" + "---|" * 10
+    rows.append(header)
+    rows.append(sep)
+    for c in report["cells"]:
+        if c.get("skipped"):
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — |"
+                        f" — | skipped | — | — | — |")
+            continue
+        if not c.get("ok") or "roofline" not in c:
+            status = "FAILED" if not c.get("ok") else "no-analysis"
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — |"
+                        f" — | {status} | — | — | — |")
+            continue
+        r = c["roofline"]
+        step = r["step_s"]
+        # roofline fraction: useful model compute time / bound step time
+        model_t = c.get("model_flops_per_device", 0) / PEAK_FLOPS_BF16
+        frac = model_t / step if step else 0.0
+        ur = c.get("useful_flops_ratio")
+        ur_s = f"{ur:.3f}" if ur is not None else "—"
+        mem = c.get("memory", {}).get("peak_bytes_per_device")
+        mem_s = fmt_bytes(mem) if mem else "—"
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} |"
+            f" {r['compute_s']:.4f} | {r['memory_s']:.4f} |"
+            f" {r['collective_s']:.4f} | {r['dominant']} |"
+            f" {frac:.3f} | {ur_s} | {mem_s} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_single.json"
+    print(render(path))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows: ``us_per_call`` is the wall
+time of one full experiment computation (the paper's headline claim is that
+Flora's *selection overhead is negligible* — milliseconds); ``derived`` is
+the experiment's headline number(s).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.core import costmodel, evaluate, spark_sim
+from repro.core.flora import Flora
+from repro.core.trace import JobClass, PAPER_JOBS
+
+
+def _timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6
+
+
+def bench_table3_trace_stats(trace, price):
+    stats, us = _timed(trace.stats, price)
+    derived = (f"cost_mean={stats['cost_usd']['mean']:.3f};"
+               f"rt_mean={stats['runtime_s']['mean']:.0f};"
+               f"rt_max={stats['runtime_s']['max']:.0f}"
+               f" (paper: 1.409/1835/21715)")
+    print(f"table3_trace_stats,{us:.1f},{derived}")
+
+
+def bench_table4_selection(trace, price):
+    results, us = _timed(evaluate.table4, trace, price)
+    by = {r.name: r for r in results}
+    derived = ";".join(
+        f"{name}={by[name].mean_norm_cost:.3f}"
+        for name in ("Flora", "Flora with one class", "Juggler", "Crispy"))
+    derived += " (paper: Flora=1.052;Fw1C=1.336;Juggler=1.334;Crispy=1.384)"
+    print(f"table4_selection,{us:.1f},{derived}")
+
+
+def bench_table5_perjob(trace, price):
+    t5, us = _timed(evaluate.table5, trace, price)
+    flora = t5["Flora"]
+    worst = max(r.norm_cost for r in flora.per_job)
+    a_picks = {r.selection.index for r in flora.per_job
+               if r.job.job_class is JobClass.A}
+    b_picks = {r.selection.index for r in flora.per_job
+               if r.job.job_class is JobClass.B}
+    derived = (f"flora_mean={flora.mean_norm_cost:.3f};max={worst:.3f};"
+               f"classA_picks={sorted(a_picks)};classB_picks={sorted(b_picks)}"
+               f" (paper: A->9, B->1, mean 1.052)")
+    print(f"table5_perjob,{us:.1f},{derived}")
+
+
+def bench_fig2_price_sweep(trace, price):
+    ratios = [10 ** (-2 + 3 * i / 24) for i in range(25)]
+    curves, us = _timed(evaluate.fig2_price_sweep, trace, price, ratios)
+    always_best = all(
+        curves["Flora"][i] <= min(v[i] for k, v in curves.items()
+                                  if k != "Flora") + 1e-9
+        for i in range(len(ratios)))
+    derived = (f"points={len(ratios)};"
+               f"flora_max_over_sweep={max(curves['Flora']):.3f};"
+               f"flora_always_best={always_best}")
+    print(f"fig2_price_sweep,{us:.1f},{derived}")
+
+
+def bench_fig3_misclassification(trace, price):
+    fracs = [i / 20 for i in range(21)]
+    curves, us = _timed(evaluate.fig3_misclassification, trace, price, fracs)
+    x, us2 = _timed(evaluate.crossover_fraction, trace, price)
+    derived = (f"crossover_vs_fw1c={x:.3f} (paper: ~1/3);"
+               f"coinflip={curves['Flora'][10]:.3f};"
+               f"random={curves['random selection'][0]:.3f}")
+    print(f"fig3_misclassification,{us + us2:.1f},{derived}")
+
+
+def bench_selection_overhead(trace, price):
+    """§III-B: per-selection overhead 'in the millisecond range'."""
+    flora = Flora(trace, price)
+    job = PAPER_JOBS[0]
+    _, us = _timed(lambda: flora.select_for_job(job), repeat=200)
+    print(f"selection_overhead,{us:.1f},paper_claims_milliseconds="
+          f"{us < 10_000}")
+
+
+def bench_tpu_selection():
+    """DESIGN.md §3: mesh selection over the dry-run-profiled trace."""
+    from repro.core.costmodel import TpuPriceModel
+    from repro.core.tpu_flora import (MeshOption, TpuFlora,
+                                      records_from_dryrun_report)
+    path = os.environ.get("DRYRUN_REPORT", "dryrun_single.json")
+    if not os.path.exists(path):
+        print("tpu_selection,0.0,skipped=no_dryrun_report")
+        return
+    with open(path) as f:
+        report = json.load(f)
+    recs = records_from_dryrun_report(report)
+    meshes = sorted({r.mesh for r in recs})
+    options = [MeshOption(m, "v5e", 256, (16, 16), ("data", "model"))
+               for m in meshes]
+    if not recs or len(options) < 1:
+        print("tpu_selection,0.0,skipped=empty_report")
+        return
+    flora = TpuFlora(options, recs, TpuPriceModel())
+    pick, us = _timed(lambda: flora.select("decode_32k"))
+    print(f"tpu_selection,{us:.1f},decode_pick={pick.name};"
+          f"records={len(recs)}")
+
+
+def main() -> None:
+    t0 = time.time()
+    trace = spark_sim.generate_trace(seed=0)
+    price = costmodel.LinearPriceModel()
+    print("name,us_per_call,derived")
+    bench_table3_trace_stats(trace, price)
+    bench_table4_selection(trace, price)
+    bench_table5_perjob(trace, price)
+    bench_fig2_price_sweep(trace, price)
+    bench_fig3_misclassification(trace, price)
+    bench_selection_overhead(trace, price)
+    bench_tpu_selection()
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

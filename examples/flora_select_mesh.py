@@ -1,0 +1,55 @@
+"""TPU-side Flora: pick a mesh for a submitted workload from the dry-run
+profiling trace, under current chip prices (the DESIGN.md §3 adaptation).
+
+    PYTHONPATH=src python examples/flora_select_mesh.py \
+        --report dryrun_single.json --shape decode_32k --market spot
+"""
+import argparse
+import json
+import os
+
+from repro.core.costmodel import TpuPriceModel
+from repro.core.tpu_flora import (MeshOption, TpuFlora,
+                                  records_from_dryrun_report, SHAPE_CLASSES)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default="dryrun_single.json")
+    ap.add_argument("--shape", default="decode_32k",
+                    choices=list(SHAPE_CLASSES))
+    ap.add_argument("--market", default="ondemand",
+                    choices=["ondemand", "spot"])
+    ap.add_argument("--exclude-arch", default=None,
+                    help="leave this arch's profiling data out "
+                         "(the paper's no-recurrence discipline)")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.report):
+        raise SystemExit(f"run launch/dryrun.py first to produce "
+                         f"{args.report}")
+    with open(args.report) as f:
+        recs = records_from_dryrun_report(json.load(f))
+    meshes = sorted({r.mesh for r in recs})
+    options = [MeshOption(m, "v5e", 256, (16, 16), ("data", "model"))
+               for m in meshes]
+    price = TpuPriceModel(args.market)
+    flora = TpuFlora(options, recs, price)
+
+    klass = SHAPE_CLASSES[args.shape]
+    exclude = (args.exclude_arch,) if args.exclude_arch else ()
+    print(f"workload {args.shape} -> class {klass.value} "
+          f"({'state-resident' if klass.value == 'A' else 'streaming-compute'})")
+    print(f"profiled records: {len(recs)}; mesh options: "
+          f"{[o.name for o in options]}\n")
+    for r in flora.rank(klass, exclude_archs=exclude):
+        o = next(x for x in options if x.name == r.config_id)
+        print(f"  {r.config_id:12s} score={r.score:8.3f} "
+              f"mean_norm_cost={r.mean_norm_cost:6.3f} "
+              f"({o.hourly_cost(price):7.2f} $/h)")
+    pick = flora.select(args.shape, exclude_archs=exclude)
+    print(f"\nFlora selects: {pick.name}")
+
+
+if __name__ == "__main__":
+    main()

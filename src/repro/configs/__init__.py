@@ -1,0 +1,78 @@
+"""Architecture configuration registry.
+
+``get(name)`` returns the exact published config; ``reduced(cfg)`` returns
+a same-family shrunken variant for CPU smoke tests (small width/depth, few
+experts, tiny vocab).  Full configs are only exercised via the dry-run
+(ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from typing import Dict, List
+
+from repro.models.types import ModelConfig
+
+_MODULES = {
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-3b": "rwkv6_3b",
+    "stablelm-3b": "stablelm_3b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "granite-20b": "granite_20b",
+    "deepseek-7b": "deepseek_7b",
+    "pixtral-12b": "pixtral_12b",
+}
+
+ARCH_NAMES: List[str] = list(_MODULES)
+
+
+def get(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get(n) for n in ARCH_NAMES}
+
+
+def reduced(cfg: ModelConfig, *, d_model: int = 64,
+            vocab: int = 512) -> ModelConfig:
+    """Same-family shrunken config for CPU smoke tests."""
+    period = cfg.moe_period if cfg.num_experts else 1
+    cyc = math.lcm(len(cfg.block_pattern), period)
+    rem = 1 if cfg.num_layers % cyc else 0
+    heads = 4
+    kv = max(1, heads * cfg.num_kv_heads // cfg.num_heads)
+    changes = dict(
+        num_layers=2 * cyc + rem,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=d_model // heads,
+        d_ff=4 * d_model if cfg.moe_d_ff is None else 2 * d_model,
+        vocab_size=vocab,
+        dtype="float32",
+    )
+    if cfg.num_experts:
+        changes.update(num_experts=8,
+                       experts_per_token=min(cfg.experts_per_token, 2),
+                       moe_d_ff=(2 * d_model if cfg.moe_d_ff is not None
+                                 else None))
+    if cfg.window:
+        changes.update(window=16)
+    if cfg.family in ("hybrid",):
+        changes.update(lru_width=d_model)
+    if cfg.family == "ssm":
+        changes.update(rwkv_head_dim=16, num_heads=d_model // 16,
+                       num_kv_heads=d_model // 16, head_dim=16)
+    if cfg.encoder_layers:
+        changes.update(encoder_layers=2)
+    if cfg.frontend_len:
+        changes.update(frontend_len=8)
+    return dataclasses.replace(cfg, **changes)

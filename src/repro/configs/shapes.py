@@ -1,0 +1,107 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for every cell.
+
+The four shapes (seq_len x global_batch) are fixed by the assignment:
+
+    train_4k      4,096 x 256   (training)
+    prefill_32k  32,768 x 32    (inference prefill)
+    decode_32k   32,768 x 128   (inference decode: 1 token vs KV cache)
+    long_500k   524,288 x 1     (long-context decode)
+
+``decode_*``/``long_*`` lower ``serve_step``, not ``train_step``.
+``long_500k`` requires sub-quadratic state and therefore only runs for the
+SSM/hybrid families (rwkv6-3b, recurrentgemma-9b); it is skipped — and the
+skip recorded — for pure full-attention archs (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.types import ModelConfig, ShapeSpec
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    if shape.name == "long_500k":
+        return cfg.family in SUBQUADRATIC_FAMILIES
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    if not applicable(cfg, shape):
+        return (f"{cfg.name} is pure full attention; a {shape.seq_len}-token "
+                "dense KV cache is not a meaningful configuration "
+                "(DESIGN.md §5)")
+    return None
+
+
+def cells(cfg: ModelConfig) -> List[ShapeSpec]:
+    return [s for s in SHAPES.values() if applicable(cfg, s)]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, *,
+                with_labels: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for a train/prefill batch of this cell."""
+    B, T = shape.global_batch, shape.seq_len
+    emb_dtype = cfg.compute_dtype
+    if cfg.is_encdec:
+        # source frames and target tokens split the budget evenly
+        F = Tt = T // 2
+        out = {
+            "frontend_embeds": _sds((B, F, cfg.d_model), emb_dtype),
+            "tokens": _sds((B, Tt), jnp.int32),
+        }
+        if with_labels:
+            out["labels"] = _sds((B, Tt), jnp.int32)
+        return out
+    if cfg.frontend == "vision":
+        F = min(cfg.frontend_len, T // 4)
+        out = {
+            "frontend_embeds": _sds((B, F, cfg.d_model), emb_dtype),
+            "tokens": _sds((B, T - F), jnp.int32),
+        }
+        if with_labels:
+            out["labels"] = _sds((B, T), jnp.int32)
+        return out
+    out = {"tokens": _sds((B, T), jnp.int32)}
+    if with_labels:
+        out["labels"] = _sds((B, T), jnp.int32)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(token, pos) ShapeDtypeStructs for a decode step of this cell."""
+    B = shape.global_batch
+    return {
+        "token": _sds((B,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, key: jax.Array, *,
+               with_labels: bool = True) -> Dict[str, jax.Array]:
+    """Concrete random batch matching batch_specs (smoke tests/examples)."""
+    specs = batch_specs(cfg, shape, with_labels=with_labels)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, s.shape, 0, cfg.vocab_size,
+                                           dtype=jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, s.dtype) * 0.02
+    return out

@@ -1,0 +1,16 @@
+"""Flora core: the paper's contribution (cloud resource selection) plus the
+TPU-side adaptation (mesh/slice selection for JAX workloads).
+
+Layers:
+  trace       -- profiling-trace schema + the paper's evaluation universe
+  costmodel   -- per-resource (GCP) and per-chip (TPU) price models
+  flora       -- the selector: classify -> rank by normalized class cost
+  baselines   -- Fw1C, Juggler, Crispy, static and random baselines
+  spark_sim   -- calibrated analytical Spark model regenerating the trace
+  evaluate    -- paper §III experiments (Tables III-V, Figs. 2-3)
+  tpu_flora   -- Flora over TPU mesh configurations (dry-run profiled)
+"""
+from repro.core.trace import (CloudConfig, ExecutionRecord, GCP_CONFIGS,
+                              JobClass, JobSpec, PAPER_JOBS, Trace)
+from repro.core.costmodel import LinearPriceModel, TpuPriceModel
+from repro.core.flora import Flora, RankedConfig, rank_generic

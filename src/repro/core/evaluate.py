@@ -1,0 +1,158 @@
+"""Evaluation harness reproducing the paper's §III experiments.
+
+All experiments follow the paper's protocol:
+
+* selections are simulated, then judged against the trace itself;
+* per-job normalization: 1.0 = the best (cheapest / fastest) value any
+  configuration achieved for that job (§III-C);
+* leave-one-algorithm-out: an approach selecting for ``Sort/188GiB`` never
+  sees profiling data of *any* Sort job (§III-A) — enforced inside
+  :class:`repro.core.baselines.FloraApproach` for Flora/Fw1C (the other
+  baselines do not read the trace at all).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core import costmodel
+from repro.core.baselines import (Approach, FloraApproach, RandomSelection,
+                                  standard_approaches)
+from repro.core.trace import CloudConfig, JobClass, JobSpec, Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class JobResult:
+    job: JobSpec
+    selection: Optional[CloudConfig]
+    norm_cost: float
+    norm_runtime: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproachResult:
+    name: str
+    per_job: Tuple[JobResult, ...]
+    mean_norm_cost: float
+    mean_norm_runtime: float
+
+
+def _job_cost(trace: Trace, job: JobSpec, config: CloudConfig,
+              price: costmodel.LinearPriceModel) -> float:
+    return costmodel.execution_cost(trace.runtime_s(job, config), config, price)
+
+
+def _norms(trace: Trace, job: JobSpec, price: costmodel.LinearPriceModel
+           ) -> Tuple[float, float]:
+    """(min cost, min runtime) over all configs for this job."""
+    costs = [_job_cost(trace, job, c, price) for c in trace.configs]
+    runtimes = [trace.runtime_s(job, c) for c in trace.configs]
+    return min(costs), min(runtimes)
+
+
+def evaluate_approach(trace: Trace, price: costmodel.LinearPriceModel,
+                      approach: Approach,
+                      jobs: Optional[Sequence[JobSpec]] = None
+                      ) -> ApproachResult:
+    jobs = list(jobs) if jobs is not None else trace.jobs
+    per_job: List[JobResult] = []
+    for job in jobs:
+        best_cost, best_rt = _norms(trace, job, price)
+        if isinstance(approach, RandomSelection):
+            # closed-form expectation over a uniform choice
+            ncost = sum(_job_cost(trace, job, c, price) / best_cost
+                        for c in trace.configs) / len(trace.configs)
+            nrt = sum(trace.runtime_s(job, c) / best_rt
+                      for c in trace.configs) / len(trace.configs)
+            per_job.append(JobResult(job, None, ncost, nrt))
+            continue
+        sel = approach.select(job)
+        if sel is None:       # not applicable (e.g. Juggler on a scan)
+            continue
+        ncost = _job_cost(trace, job, sel, price) / best_cost
+        nrt = trace.runtime_s(job, sel) / best_rt
+        per_job.append(JobResult(job, sel, ncost, nrt))
+    if not per_job:
+        return ApproachResult(approach.name, (), math.nan, math.nan)
+    mean_c = sum(r.norm_cost for r in per_job) / len(per_job)
+    mean_r = sum(r.norm_runtime for r in per_job) / len(per_job)
+    return ApproachResult(approach.name, tuple(per_job), mean_c, mean_r)
+
+
+# --- Table IV -------------------------------------------------------------------
+
+def table4(trace: Trace, price: costmodel.LinearPriceModel
+           ) -> List[ApproachResult]:
+    results = [evaluate_approach(trace, price, a)
+               for a in standard_approaches(trace, price)]
+    results.sort(key=lambda r: -r.mean_norm_cost)
+    return results
+
+
+# --- Table V --------------------------------------------------------------------
+
+def table5(trace: Trace, price: costmodel.LinearPriceModel
+           ) -> Mapping[str, ApproachResult]:
+    wanted = ("Crispy", "Juggler", "Flora with one class", "Flora")
+    out: Dict[str, ApproachResult] = {}
+    for a in standard_approaches(trace, price):
+        if a.name in wanted:
+            out[a.name] = evaluate_approach(trace, price, a)
+    return out
+
+
+# --- Fig. 2: price-structure sweep -----------------------------------------------
+
+def fig2_price_sweep(trace: Trace, base: costmodel.LinearPriceModel,
+                     ratios: Sequence[float]) -> Mapping[str, List[float]]:
+    """Mean normalized cost per approach, as mem/CPU price ratio varies.
+
+    ``ratios[i]`` = hourly cost of 1 GiB expressed in vCPU-hours (the
+    paper's Fig. 2 x-axis, 10^-2 .. 10^1).
+    """
+    curves: Dict[str, List[float]] = {}
+    for r in ratios:
+        price = base.with_mem_to_cpu_ratio(r)
+        for res in table4(trace, price):
+            curves.setdefault(res.name, []).append(res.mean_norm_cost)
+    return curves
+
+
+# --- Fig. 3: misclassification sweep ----------------------------------------------
+
+def fig3_misclassification(trace: Trace, price: costmodel.LinearPriceModel,
+                           fractions: Sequence[float]
+                           ) -> Mapping[str, List[float]]:
+    """Expected mean normalized cost when a fraction of given jobs is
+    misclassified by the user (test-job labels stay expert-correct, §III-E).
+
+    Computed in closed form: each job contributes
+    ``(1-f) * cost(correct class) + f * cost(flipped class)``.
+    """
+    correct = evaluate_approach(trace, price, FloraApproach(trace, price))
+    flipped = evaluate_approach(
+        trace, price, FloraApproach(trace, price, flip_class=True))
+    fw1c = evaluate_approach(
+        trace, price, FloraApproach(trace, price, one_class=True))
+    rnd = evaluate_approach(trace, price, RandomSelection(trace.configs))
+    flora_curve = [
+        (1 - f) * correct.mean_norm_cost + f * flipped.mean_norm_cost
+        for f in fractions]
+    return {
+        "Flora": flora_curve,
+        "Flora with one class": [fw1c.mean_norm_cost] * len(fractions),
+        "random selection": [rnd.mean_norm_cost] * len(fractions),
+    }
+
+
+def crossover_fraction(trace: Trace, price: costmodel.LinearPriceModel,
+                       steps: int = 200) -> float:
+    """Misclassification fraction beyond which Fw1C beats two-class Flora."""
+    fractions = [i / steps for i in range(steps + 1)]
+    curves = fig3_misclassification(trace, price, fractions)
+    fw1c = curves["Flora with one class"][0]
+    for f, v in zip(fractions, curves["Flora"]):
+        if v > fw1c:
+            return f
+    return 1.0

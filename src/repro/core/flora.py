@@ -1,0 +1,115 @@
+"""Flora — the paper's selector (§II).
+
+Given (i) an infrastructure-profiling trace, (ii) the submitted job's class
+annotation, and (iii) *current* hourly prices, rank every cluster
+configuration by the sum of per-test-job-normalized predicted costs and
+pick the argmin:
+
+    c* = argmin_c  sum_{j in P_K}  cost(j, c) / min_{c'} cost(j, c')
+    cost(j, c) = runtime_in_hours(j, c) * current_hourly_cost(c)
+
+The ranking core is written generically over (job, config, runtime-hours)
+triples so the TPU-side adaptation (:mod:`repro.core.tpu_flora`) reuses it
+unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Hashable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core import costmodel
+from repro.core.trace import CloudConfig, JobClass, JobSpec, Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class RankedConfig:
+    config_id: Hashable
+    score: float          # sum of normalized costs; lower is better
+    mean_norm_cost: float  # score / number of test jobs
+
+
+def rank_generic(
+    runtime_hours: Mapping[Tuple[Hashable, Hashable], float],
+    jobs: Sequence[Hashable],
+    config_ids: Sequence[Hashable],
+    hourly_cost: Callable[[Hashable], float],
+) -> List[RankedConfig]:
+    """Rank configurations by summed normalized cost over ``jobs``.
+
+    ``runtime_hours[(job, config)]`` is the profiled runtime.  Jobs with a
+    missing entry for some config contribute only over the configs they
+    were profiled on (the paper's trace is complete, so this only matters
+    for partial re-profiling, §II-B).
+    """
+    if not jobs:
+        raise ValueError("no test jobs to learn from")
+    scores: Dict[Hashable, float] = {c: 0.0 for c in config_ids}
+    counts: Dict[Hashable, int] = {c: 0 for c in config_ids}
+    for j in jobs:
+        costs = {c: runtime_hours[(j, c)] * hourly_cost(c)
+                 for c in config_ids if (j, c) in runtime_hours}
+        if not costs:
+            continue
+        best = min(costs.values())
+        if best <= 0:
+            raise ValueError(f"non-positive cost for job {j!r}")
+        for c, v in costs.items():
+            scores[c] += v / best
+            counts[c] += 1
+    ranked = [RankedConfig(c, scores[c],
+                           scores[c] / counts[c] if counts[c] else float("inf"))
+              for c in config_ids]
+    # deterministic: sort by score then by stable config order
+    order = {c: i for i, c in enumerate(config_ids)}
+    ranked.sort(key=lambda r: (r.score, order[r.config_id]))
+    return ranked
+
+
+class Flora:
+    """The paper's approach: classify, then rank by class-mates' costs."""
+
+    def __init__(self, trace: Trace,
+                 price: costmodel.LinearPriceModel,
+                 *, one_class: bool = False):
+        """``one_class=True`` gives the Fw1C baseline (skip Step 1)."""
+        self.trace = trace
+        self.price = price
+        self.one_class = one_class
+
+    # -- Step 2: ranking ------------------------------------------------------
+    def rank(self, annotated_class: JobClass,
+             exclude_algorithms: Sequence[str] = ()) -> List[RankedConfig]:
+        job_class = None if self.one_class else annotated_class
+        test_jobs = self.trace.filter_jobs(
+            job_class=job_class, exclude_algorithms=exclude_algorithms)
+        runtime_hours = {
+            (j.name, c.index): self.trace.runtime_s(j, c) / 3600.0
+            for j in test_jobs for c in self.trace.configs
+            if self.trace.has(j, c)}
+        by_index = {c.index: c for c in self.trace.configs}
+        return rank_generic(
+            runtime_hours,
+            [j.name for j in test_jobs],
+            [c.index for c in self.trace.configs],
+            lambda idx: self.price(by_index[idx]),
+        )
+
+    def select(self, annotated_class: JobClass,
+               exclude_algorithms: Sequence[str] = ()) -> CloudConfig:
+        ranked = self.rank(annotated_class, exclude_algorithms)
+        return self.trace.config(ranked[0].config_id)
+
+    # -- convenience: full pipeline for a submitted job -----------------------
+    def select_for_job(self, job: JobSpec, *,
+                       annotated_class: Optional[JobClass] = None,
+                       assume_unique: bool = True) -> CloudConfig:
+        """Select a config for ``job``.
+
+        ``annotated_class`` models the user annotation of Step 1; defaults
+        to the expert class.  ``assume_unique`` enforces the paper's
+        leave-one-algorithm-out discipline: profiling data from the same
+        underlying algorithm is never used for the job itself (§III-A).
+        """
+        klass = annotated_class if annotated_class is not None else job.job_class
+        exclude = (job.algorithm,) if assume_unique else ()
+        return self.select(klass, exclude_algorithms=exclude)

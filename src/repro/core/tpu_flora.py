@@ -1,0 +1,145 @@
+"""Flora over TPU mesh configurations — the framework integration.
+
+The paper's pipeline maps 1:1 onto TPU cluster selection (DESIGN.md §3):
+
+* a *cloud configuration* is a :class:`MeshOption` — a TPU slice (chip
+  count, generation, $/chip-hour market) plus the mesh split (data vs
+  model parallel axes);
+* a *test job* is an (architecture x input shape) workload whose "runtime"
+  is the roofline-model step time derived from the compiled dry-run
+  artifact (this container has no TPU, so the dry-run IS the profiler;
+  on real hardware the same trace would hold measured step times);
+* *job classes* follow the paper's data-access-pattern split:
+  class A (**memory-demanding / state-resident**): decode and long-context
+  serving, whose KV-cache/recurrent state must stay HBM-resident;
+  class B (**memory-yielding / streaming-compute**): training and prefill,
+  which stream activations through the MXU.
+
+Selection reuses :func:`repro.core.flora.rank_generic` verbatim — the
+paper's normalized-cost ranking is class- and substrate-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Hashable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.costmodel import TpuPriceModel
+from repro.core.flora import RankedConfig, rank_generic
+from repro.core.trace import JobClass
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshOption:
+    """One selectable TPU deployment: slice size x mesh split."""
+
+    name: str               # e.g. "v5e-256 dp16xtp16"
+    generation: str         # "v5e" | "v5p"
+    chips: int
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+
+    def hourly_cost(self, price: TpuPriceModel) -> float:
+        return price.slice_hour(self.generation, self.chips)
+
+
+#: Which shapes belong to which class (user-overridable, like the paper's
+#: user annotation step).
+SHAPE_CLASSES: Mapping[str, JobClass] = {
+    "train_4k": JobClass.B,      # streaming compute: FLOP-bound
+    "prefill_32k": JobClass.B,   # streaming compute: FLOP-bound
+    "decode_32k": JobClass.A,    # state-resident: KV-cache bandwidth-bound
+    "long_500k": JobClass.A,     # state-resident: long-context decode
+}
+
+
+def classify_workload(shape_name: str,
+                      annotation: Optional[JobClass] = None) -> JobClass:
+    """Step 1 — classification.  ``annotation`` models the user label."""
+    if annotation is not None:
+        return annotation
+    return SHAPE_CLASSES[shape_name]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadRecord:
+    """One profiled cell: (arch, shape) on a mesh option -> step seconds."""
+
+    arch: str
+    shape: str
+    mesh: str
+    step_seconds: float     # roofline step time (or measured, on hardware)
+    steps: int = 1          # steps per job (scales runtime, not ranking)
+
+    @property
+    def job_id(self) -> str:
+        return f"{self.arch}:{self.shape}"
+
+    @property
+    def job_class(self) -> JobClass:
+        return SHAPE_CLASSES[self.shape]
+
+
+class TpuFlora:
+    """Flora Steps 0-2 over TPU mesh options."""
+
+    def __init__(self, options: Sequence[MeshOption],
+                 records: Sequence[WorkloadRecord],
+                 price: TpuPriceModel, *, one_class: bool = False):
+        self.options = list(options)
+        self.records = list(records)
+        self.price = price
+        self.one_class = one_class
+        self._by_name = {o.name: o for o in self.options}
+
+    def rank(self, job_class: JobClass,
+             exclude_archs: Sequence[str] = ()) -> List[RankedConfig]:
+        runtime_hours: Dict[Tuple[Hashable, Hashable], float] = {}
+        jobs: List[str] = []
+        for r in self.records:
+            if not self.one_class and r.job_class is not job_class:
+                continue
+            if r.arch in exclude_archs:
+                continue
+            runtime_hours[(r.job_id, r.mesh)] = r.step_seconds * r.steps / 3600.0
+            if r.job_id not in jobs:
+                jobs.append(r.job_id)
+        return rank_generic(
+            runtime_hours, jobs, [o.name for o in self.options],
+            lambda name: self._by_name[name].hourly_cost(self.price))
+
+    def select(self, shape_name: str, *,
+               annotation: Optional[JobClass] = None,
+               exclude_archs: Sequence[str] = ()) -> MeshOption:
+        """Full pipeline for a submitted (new) workload.
+
+        ``exclude_archs`` enforces the paper's no-recurrence discipline:
+        the submitted architecture's own profiling data is not consulted.
+        """
+        klass = classify_workload(shape_name, annotation)
+        ranked = self.rank(klass, exclude_archs=exclude_archs)
+        return self._by_name[ranked[0].config_id]
+
+
+# --- trace I/O (written by launch/dryrun.py, read by launch/train.py) ---------
+
+def records_from_dryrun_report(report: Mapping) -> List[WorkloadRecord]:
+    """Convert a dryrun.py JSON report into profiling records.
+
+    The roofline step time is ``max(compute, memory, collective)`` seconds
+    per step — the bound the compiled artifact proves.
+    """
+    out = []
+    for cell in report.get("cells", []):
+        if not cell.get("ok"):
+            continue
+        roof = cell["roofline"]
+        step = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        out.append(WorkloadRecord(arch=cell["arch"], shape=cell["shape"],
+                                  mesh=cell["mesh"], step_seconds=step))
+    return out
+
+
+def load_records(path: str) -> List[WorkloadRecord]:
+    with open(path) as f:
+        return records_from_dryrun_report(json.load(f))

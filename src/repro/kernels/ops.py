@@ -1,0 +1,50 @@
+"""Jitted dispatch wrappers for the Pallas kernels.
+
+On TPU the Pallas kernels run natively; on CPU (this container) they run
+under ``interpret=True`` for correctness tests, while the model layers use
+their pure-jnp paths by default.  ``use_pallas(True)`` flips model-side
+dispatch (repro.models reads this at trace time).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rwkv6_scan import wkv6_pallas
+
+_FORCE_PALLAS = False
+
+
+def use_pallas(on: bool = True) -> None:
+    global _FORCE_PALLAS
+    _FORCE_PALLAS = on
+
+
+def pallas_enabled() -> bool:
+    return _FORCE_PALLAS or jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_kv: int = 128):
+    """Flash attention (Pallas), interpreted on CPU."""
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_kv=block_kv,
+                                  interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, w, u, s0, *, chunk: int = 64):
+    """RWKV-6 recurrence (Pallas), interpreted on CPU."""
+    return wkv6_pallas(r, k, v, w, u, s0, chunk=chunk,
+                       interpret=_interpret())

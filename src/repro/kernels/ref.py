@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# the exact sequential recurrence is the model-side reference already
+from repro.models.recurrent import wkv6_scan_ref  # noqa: F401  (re-export)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """Naive softmax attention with GQA.  q: (B,Tq,H,D); k/v: (B,Tk,G,D)."""
+    B, Tq, H, D = q.shape
+    Tk, G = k.shape[1], k.shape[2]
+    R = H // G
+    qg = q.reshape(B, Tq, G, R, D).astype(jnp.float32) / math.sqrt(D)
+    s = jnp.einsum("btgrd,bsgd->bgrts", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrts,bsgd->btgrd", p, v.astype(jnp.float32))
+    return o.reshape(B, Tq, H, D).astype(v.dtype)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel for the RWKV-6 (Finch) WKV recurrence.
+
+TPU adaptation: the recurrence is O(1)-state sequential in T, so the grid
+parallelises over (batch, head) and each program streams its time series
+through VMEM while the (N, N) state matrix stays resident in VMEM scratch
+— the same structure Mamba/linear-attention TPU kernels use.  N = 64
+(rwkv6) keeps the state tile MXU/VREG-friendly; the T-loop body is pure
+VPU elementwise + rank-1 updates.
+
+    y_t = r_t^T (s_{t-1} + (u * k_t) outer v_t)
+    s_t = diag(w_t) s_{t-1} + k_t outer v_t
+
+Oracle: repro.models.recurrent.wkv6_scan_ref (re-exported in ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, *,
+            chunk: int):
+    """One (b, h) stream.  r/k/v/w refs: (1, T, 1, N); u: (1, N);
+    s0/sT: (1, 1, N, N); y: (1, T, 1, N)."""
+    T, N = r_ref.shape[1], r_ref.shape[3]
+    u = u_ref[0].astype(jnp.float32)                     # (N,)
+    s = s0_ref[0, 0].astype(jnp.float32)                 # (N, N) rows=k, cols=v
+
+    nchunks = T // chunk
+
+    def chunk_body(c, s):
+        t0 = c * chunk
+        r = pl.load(r_ref, (0, pl.dslice(t0, chunk), 0,
+                            slice(None))).astype(jnp.float32)
+        k = pl.load(k_ref, (0, pl.dslice(t0, chunk), 0,
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(t0, chunk), 0,
+                            slice(None))).astype(jnp.float32)
+        w = pl.load(w_ref, (0, pl.dslice(t0, chunk), 0,
+                            slice(None))).astype(jnp.float32)
+
+        def step(t, carry):
+            s, ys = carry
+            rt, kt, vt, wt = r[t], k[t], v[t], w[t]      # (N,)
+            kv = kt[:, None] * vt[None, :]               # (N, N)
+            y = ((s + u[:, None] * kv) * rt[:, None]).sum(axis=0)
+            s = wt[:, None] * s + kv
+            ys = ys.at[t].set(y)
+            return s, ys
+
+        ys0 = jnp.zeros((chunk, N), jnp.float32)
+        s, ys = lax.fori_loop(0, chunk, step, (s, ys0))
+        pl.store(y_ref, (0, pl.dslice(t0, chunk), 0, slice(None)),
+                 ys.astype(y_ref.dtype))
+        return s
+
+    s = lax.fori_loop(0, nchunks, chunk_body, s)
+    sT_ref[0, 0] = s.astype(sT_ref.dtype)
+
+
+def wkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, s0: jax.Array, *, chunk: int = 64,
+                interpret: bool = False):
+    """r,k,v,w: (B,T,H,N); u: (H,N); s0: (B,H,N,N) -> (y, s_T)."""
+    B, T, H, N = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    grid = (B, H)
+    io_spec = pl.BlockSpec((1, T, 1, N), lambda b, h: (b, 0, h, 0))
+    y, sT = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[io_spec, io_spec, io_spec, io_spec,
+                  pl.BlockSpec((1, N), lambda b, h: (h, 0)),
+                  pl.BlockSpec((1, 1, N, N), lambda b, h: (b, h, 0, 0))],
+        out_specs=[io_spec,
+                   pl.BlockSpec((1, 1, N, N), lambda b, h: (b, h, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, T, H, N), r.dtype),
+                   jax.ShapeDtypeStruct((B, H, N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, sT

@@ -1,0 +1,47 @@
+"""Mesh construction for the production deployment.
+
+``make_production_mesh`` is a FUNCTION (not module state) so importing this
+module never touches jax device state.  The single-pod mesh is 16x16 = 256
+chips (v5e pod); multi-pod adds a leading 2-pod axis = 512 chips.
+
+``mesh_options`` enumerates alternative splits of the same chips — the
+"scale-out vs scale-up" dimension of the paper mapped onto SPMD: at fixed
+chip count, how the (data, model) axes divide determines whether a workload
+gets DP bandwidth or TP memory headroom.  These options are the TPU
+Flora selector's configuration space (repro.core.tpu_flora).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Mesh over the first prod(shape) devices (the dry-run exposes 512
+    host devices; the single-pod mesh uses the first 256)."""
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(jax.devices())} — "
+                           "run under launch/dryrun.py or set XLA_FLAGS")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def mesh_options(chips: int = 256) -> List[Tuple[Tuple[int, int], str]]:
+    """(data, model) splits of a pod, with names, for the Flora trace."""
+    opts = []
+    model = 1
+    while model <= min(chips, 64):
+        data = chips // model
+        opts.append(((data, model), f"dp{data}xtp{model}"))
+        model *= 4
+    return opts

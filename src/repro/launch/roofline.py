@@ -1,0 +1,170 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Terms (per step, single-pod v5e references):
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory_s     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective_s = wire_bytes_per_device / ICI_link_bw
+
+``cost_analysis()`` describes the *partitioned per-device* module, so both
+numerator and denominator are per chip.  Collective bytes are not in
+cost_analysis — we parse the optimized HLO and sum wire bytes per op kind
+with ring-cost factors (all-reduce moves 2x its payload; gather/scatter/
+all-to-all/permute move ~1x for group sizes >= 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Mapping, Optional, Tuple
+
+# --- hardware constants (TPU v5e, per chip) ----------------------------------
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_LINK_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g. "bf16[16,4096,5120]{2,1,0}" (layout suffix optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of all dtype[dims] tokens in `text`."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Wire bytes per device by collective kind, from optimized HLO text.
+
+    For each collective instruction we take max(result bytes, operand
+    bytes) as the payload (covers both all-gather, whose result is the big
+    side, and reduce-scatter, whose operand is), then apply ring factors.
+    ``*-start`` variants (async collectives) are counted; ``*-done`` are
+    not (same transfer).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(.+?)\s+(%?)([\w-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(3)
+        kind = None
+        for k in _COLLECTIVES:
+            if op == k or op == k + "-start":
+                kind = k
+                break
+        if kind is None:
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        operand_bytes = _shape_bytes(stripped[m.end():])
+        payload = max(result_bytes, operand_bytes)
+        if kind == "all-reduce":
+            payload *= 2           # reduce-scatter + all-gather phases
+        out[kind] += payload
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    flops: float                   # per device
+    hbm_bytes: float               # per device
+    wire_bytes: float              # per device
+    collectives: Mapping[str, int]
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / ICI_LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time: the binding constraint."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "wire_bytes_per_device": self.wire_bytes,
+            "collectives": dict(self.collectives),
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s": self.step_s,
+        }
+
+
+def analyze(compiled) -> Roofline:
+    """Roofline terms from a jax compiled artifact."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    wire = float(sum(coll.values()))
+    return Roofline(flops=flops, hbm_bytes=hbm, wire_bytes=wire,
+                    collectives=coll)
+
+
+def model_flops_per_step(n_params_active: float, tokens_per_step: float,
+                         *, training: bool) -> float:
+    """MODEL_FLOPS = 6*N*D for training (fwd+bwd), 2*N*D for inference."""
+    factor = 6.0 if training else 2.0
+    return factor * n_params_active * tokens_per_step
+
+
+def memory_analysis_dict(compiled) -> Optional[Dict[str, float]]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if out:
+        args = out.get("argument_size_in_bytes", 0.0)
+        temp = out.get("temp_size_in_bytes", 0.0)
+        outb = out.get("output_size_in_bytes", 0.0)
+        alias = out.get("alias_size_in_bytes", 0.0)
+        # peak live bytes per device ~ args + temps + (outputs not aliased)
+        out["peak_bytes_per_device"] = args + temp + max(outb - alias, 0.0)
+    return out or None

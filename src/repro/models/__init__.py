@@ -1,0 +1,3 @@
+"""Model zoo: functional JAX implementations of the assigned architectures."""
+from repro.models.types import ModelConfig, ParamSpec, ShapeSpec, count_params
+from repro.models.registry import build_model

@@ -1,0 +1,128 @@
+"""Encoder-decoder model (SeamlessM4T-v2 text/speech backbone).
+
+The assignment specifies the transformer backbone only: the speech
+frontend (conformer feature extractor) is a stub — batches carry
+precomputed frame embeddings ``(B, F, d_model)`` which feed the encoder.
+The decoder is a standard causal stack with cross-attention; decoding
+maintains a self-attention KV cache plus per-layer cross-attention caches
+computed once at prefill.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.lm import (LayerPlan, Z_LOSS_WEIGHT, _stack_apply,
+                             _stack_cache_specs, _stack_specs, layer_plans)
+from repro.models.types import ModelConfig, ParamSpec, SpecTree, init_params
+
+
+class EncDec:
+    """Encoder-decoder LM.  cfg.encoder_layers > 0; cfg.num_layers = decoder."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.encoder_layers > 0
+        self.cfg = cfg
+        self.enc_plans = [LayerPlan(kind="attn") for _ in range(cfg.encoder_layers)]
+        self.dec_plans = layer_plans(cfg, cross=True)
+
+    def param_specs(self) -> SpecTree:
+        import dataclasses
+        cfg = self.cfg
+        enc_cfg = dataclasses.replace(cfg, num_layers=cfg.encoder_layers,
+                                      encoder_layers=0)
+        return {
+            "embed": L.embed_specs(cfg),
+            "enc_stack": _stack_specs(enc_cfg, self.enc_plans),
+            "enc_norm": L.norm_specs(cfg),
+            "dec_stack": _stack_specs(cfg, self.dec_plans),
+            "final_norm": L.norm_specs(cfg),
+        }
+
+    def state_specs(self, batch: int, max_len: int, enc_len: int) -> SpecTree:
+        return _stack_cache_specs(self.cfg, self.dec_plans, batch, max_len,
+                                  enc_len)
+
+    def init(self, key: jax.Array):
+        return init_params(self.param_specs(), key, self.cfg.compute_dtype)
+
+    def init_state(self, batch: int, max_len: int, enc_len: int):
+        return init_params(self.state_specs(batch, max_len, enc_len),
+                           jax.random.PRNGKey(0))
+
+    # -- encoder -------------------------------------------------------------
+    def encode(self, params, frames: jax.Array, *, remat: bool = True):
+        cfg = self.cfg
+        x = frames.astype(cfg.compute_dtype)
+        B, F = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+        x, _, _ = _stack_apply(cfg, self.enc_plans, params["enc_stack"], x,
+                               mode="encode", positions=positions, remat=remat)
+        return L.norm_apply(params["enc_norm"], x, cfg.norm)
+
+    # -- train ---------------------------------------------------------------
+    def forward(self, params, batch: Dict[str, jax.Array], *,
+                remat: bool = True):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frontend_embeds"], remat=remat)
+        x = L.embed_apply(params["embed"], cfg, batch["tokens"])
+        x = x * math.sqrt(cfg.d_model)
+        B, T = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        x, aux, _ = _stack_apply(cfg, self.dec_plans, params["dec_stack"], x,
+                                 mode="train", positions=positions,
+                                 enc_out=enc_out, remat=remat)
+        x = L.norm_apply(params["final_norm"], x, cfg.norm)
+        logits = L.head_apply(params["embed"], cfg, x)
+        return logits, aux
+
+    def loss(self, params, batch: Dict[str, jax.Array], *, remat: bool = True):
+        logits, aux = self.forward(params, batch, remat=remat)
+        labels = batch["labels"]
+        logits = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        denom = jnp.maximum(mask.sum(), 1.0)
+        xent = jnp.sum((lse - ll) * mask) / denom
+        z_loss = Z_LOSS_WEIGHT * jnp.sum(jnp.square(lse) * mask) / denom
+        total = xent + z_loss
+        return total, {"xent": xent, "z_loss": z_loss, "aux": aux,
+                       "tokens": mask.sum()}
+
+    # -- serving ---------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, jax.Array], state):
+        """Encode the source and run the target prompt, filling caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frontend_embeds"], remat=False)
+        x = L.embed_apply(params["embed"], cfg, batch["tokens"])
+        x = x * math.sqrt(cfg.d_model)
+        B, T = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        x, _, new_state = _stack_apply(cfg, self.dec_plans,
+                                       params["dec_stack"], x,
+                                       mode="prefill", positions=positions,
+                                       caches=state, enc_out=enc_out,
+                                       remat=False)
+        x = L.norm_apply(params["final_norm"], x[:, -1:], cfg.norm)
+        logits = L.head_apply(params["embed"], cfg, x)
+        return logits[:, 0], new_state
+
+    def decode_step(self, params, token: jax.Array, pos: jax.Array, state):
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], cfg, token[:, None])
+        x = x * math.sqrt(cfg.d_model)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        x, _, new_state = _stack_apply(cfg, self.dec_plans,
+                                       params["dec_stack"], x,
+                                       mode="decode", positions=positions,
+                                       caches=state, pos=pos, remat=False)
+        x = L.norm_apply(params["final_norm"], x, cfg.norm)
+        logits = L.head_apply(params["embed"], cfg, x)
+        return logits[:, 0], new_state

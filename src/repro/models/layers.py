@@ -1,0 +1,480 @@
+"""Core neural layers: norms, linears, RoPE, attention, MLP, MoE.
+
+Pure functions over explicit parameter dicts.  Every ``*_specs`` function
+returns a tree of :class:`ParamSpec` whose logical axes drive sharding
+(`repro.sharding.rules`).  Attention uses a chunked online-softmax
+formulation (flash-attention structure in pure jnp) so 32k-token prefills
+never materialise a full T x T score matrix; the Pallas kernel in
+`repro.kernels.flash_attention` is the TPU-optimized version of the same
+contract and is dispatched via `repro.kernels.ops` when enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.types import ModelConfig, ParamSpec
+from repro.models import settings as settings_lib
+from repro.sharding.ctx import constrain
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig, dim: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d = dim if dim is not None else cfg.d_model
+    specs = {"scale": ParamSpec((d,), (None,), init="ones")}
+    if cfg.norm == "layernorm":
+        specs["bias"] = ParamSpec((d,), (None,), init="zeros")
+    return specs
+
+
+def norm_apply(p, x: jax.Array, kind: str = "rmsnorm", eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "layernorm":
+        x = x - x.mean(-1, keepdims=True)
+    var = (x * x).mean(-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if kind == "layernorm":
+        x = x + p["bias"].astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def rms_norm_1d(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Headwise RMS norm (qk-norm), f32 internals."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = (x * x).mean(-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    specs = {"embedding": ParamSpec((cfg.vocab_size, cfg.d_model),
+                                    ("vocab", "embed"), scale=0.02)}
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                  ("embed", "vocab"))
+    return specs
+
+
+def embed_apply(p, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    emb = p["embedding"].astype(cfg.compute_dtype)
+    return constrain(jnp.take(emb, tokens, axis=0), ("batch", "seq", None))
+
+
+def head_apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = p["embedding"].astype(cfg.compute_dtype).T
+    else:
+        w = p["head"].astype(cfg.compute_dtype)
+    logits = jnp.einsum("btd,dv->btv", x, w)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float,
+         fraction: float = 1.0) -> jax.Array:
+    """Rotary embedding on the last dim.  x: (B, T, H, D), positions: (B, T)."""
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, :, None].astype(jnp.float32) * freqs  # (B, T, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < d else out
+
+
+# ---------------------------------------------------------------------------
+# scaled-dot-product attention (chunked online softmax)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _block_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                mask: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One (q-chunk x kv-chunk) block.  q: (B,Tq,G,R,D), k/v: (B,Tk,G,D).
+
+    Returns (unnormalised out, row max m, row sum l)."""
+    s = jnp.einsum("btgrd,bsgd->bgrts", q, k,
+                   preferred_element_type=jnp.float32)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                          # (B,G,R,Tq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bgrts,bsgd->btgrd", p.astype(v.dtype), v)
+    return o, m, l
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+         window: Optional[int] = None, q_chunk: Optional[int] = None,
+         kv_chunk: Optional[int] = None) -> jax.Array:
+    """Chunked attention.  q: (B,Tq,H,D); k,v: (B,Tk,G,D) with H = G*R.
+
+    Causal assumes q and k cover the same positions (Tq == Tk).  The python
+    loop over q chunks is static; each q chunk runs a fori_loop over only
+    the kv chunks it can attend to (no masked-out FLOPs beyond the diagonal
+    blocks), carrying online-softmax statistics (m, l, acc).
+    """
+    st = settings_lib.get()
+    q_chunk = q_chunk if q_chunk is not None else st.q_chunk
+    kv_chunk = kv_chunk if kv_chunk is not None else st.kv_chunk
+    B, Tq, H, D = q.shape
+    Tk, G = k.shape[1], k.shape[2]
+    R = H // G
+    scale = 1.0 / math.sqrt(D)
+    q = (q * scale).reshape(B, Tq, G, R, D)
+
+    q_chunk = min(q_chunk, Tq)
+    kv_chunk = min(kv_chunk, Tk)
+    nq = -(-Tq // q_chunk)
+
+    outs = []
+    for i in range(nq):
+        q0, q1 = i * q_chunk, min((i + 1) * q_chunk, Tq)
+        qi = q[:, q0:q1]
+        cq = q1 - q0
+        # kv range this q chunk may attend to
+        hi = min(q1, Tk) if causal else Tk
+        lo = 0
+        if window is not None:
+            lo = max(0, q0 - window)
+        lo_c, hi_c = lo // kv_chunk, -(-hi // kv_chunk)
+
+        def body(j, carry, qi=qi, q0=q0, cq=cq):
+            acc, m, l = carry
+            k0 = j * kv_chunk
+            kj = lax.dynamic_slice_in_dim(k, k0, kv_chunk, axis=1)
+            vj = lax.dynamic_slice_in_dim(v, k0, kv_chunk, axis=1)
+            qpos = q0 + jnp.arange(cq)
+            kpos = k0 + jnp.arange(kv_chunk)
+            mask = jnp.ones((cq, kv_chunk), dtype=bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            mask &= (kpos < Tk)[None, :]
+            o_b, m_b, l_b = _block_attn(qi, kj, vj, mask[None, None, None])
+            m_new = jnp.maximum(m, m_b)
+            c_old = jnp.exp(m - m_new)
+            c_new = jnp.exp(m_b - m_new)
+            acc = acc * c_old[..., None].astype(acc.dtype) \
+                + o_b.transpose(0, 2, 3, 1, 4) * c_new[..., None].astype(acc.dtype)
+            l = l * c_old + l_b * c_new
+            return acc, m_new, l
+
+        acc0 = jnp.zeros((B, G, R, cq, D), jnp.float32)
+        m0 = jnp.full((B, G, R, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, R, cq), jnp.float32)
+        if st.unroll_attn or hi_c - lo_c <= 2:
+            carry = (acc0, m0, l0)
+            for j in range(lo_c, hi_c):
+                carry = body(j, carry)
+            acc, m, l = carry
+        else:
+            acc, m, l = lax.fori_loop(lo_c, hi_c, body, (acc0, m0, l0))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out.transpose(0, 3, 1, 2, 4).reshape(B, cq, H, D))
+    return jnp.concatenate(outs, axis=1).astype(v.dtype) if len(outs) > 1 \
+        else outs[0].astype(v.dtype)
+
+
+def sdpa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                valid: jax.Array) -> jax.Array:
+    """Single-token attention over a cache.
+
+    q: (B,1,H,D); caches: (B,S,G,D); valid: (S,) bool mask of live entries.
+    """
+    B, _, H, D = q.shape
+    S, G = k_cache.shape[1], k_cache.shape[2]
+    R = H // G
+    qg = (q * (1.0 / math.sqrt(D))).reshape(B, 1, G, R, D)
+    s = jnp.einsum("btgrd,bsgd->bgrts", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrts,bsgd->btgrd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, D)
+
+
+def _cache_write_prefill(cache: jax.Array, k: jax.Array) -> jax.Array:
+    """Write a T-token prefill into a cache of S slots.
+
+    S >= T: plain write at offset 0.  S < T (ring/window cache): keep the
+    last S tokens at their ring slots (slot = position % S)."""
+    S, T = cache.shape[1], k.shape[1]
+    k = k.astype(cache.dtype)
+    if T <= S:
+        return lax.dynamic_update_slice_in_dim(cache, k, 0, axis=1)
+    tail = k[:, T - S:]
+    slots = (jnp.arange(T - S, T)) % S
+    return cache.at[:, slots].set(tail)
+
+
+# ---------------------------------------------------------------------------
+# attention layer (projections + rope + qk-norm + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, *, cross: bool = False) -> Dict[str, ParamSpec]:
+    d, H, G, D = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((d, H, D), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, G, D), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, G, D), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, D, d), ("heads", "head_dim", "embed"),
+                        scale=1.0 / math.sqrt(H * D)),
+    }
+    if cfg.qk_norm and not cross:
+        specs["q_norm"] = ParamSpec((D,), (None,), init="ones")
+        specs["k_norm"] = ParamSpec((D,), (None,), init="ones")
+    return specs
+
+
+def _project_q(p, cfg, x, positions, *, use_rope=True):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm_1d(q, p["q_norm"])
+    if use_rope and positions is not None:
+        q = rope(q, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+        q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    return q
+
+
+def _project_kv(p, cfg, x, positions, *, use_rope=True):
+    k = jnp.einsum("btd,dgk->btgk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dgk->btgk", x, p["wv"].astype(x.dtype))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    if cfg.qk_norm and "k_norm" in p:
+        k = rms_norm_1d(k, p["k_norm"])
+    if use_rope and positions is not None:
+        k = rope(k, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+        k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    return k, v
+
+
+def attn_apply(p, cfg: ModelConfig, x: jax.Array, *, mode: str,
+               positions: Optional[jax.Array] = None,
+               window: Optional[int] = None,
+               cache: Optional[Dict[str, jax.Array]] = None,
+               pos: Optional[jax.Array] = None,
+               kv_x: Optional[jax.Array] = None,
+               use_rope: bool = True,
+               ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Attention layer.
+
+    mode: "causal" (train/prefill), "full" (encoder), "cross"
+    (decoder->encoder), "decode" (one token against cache),
+    "cross_decode" (one token against precomputed cross kv cache).
+    Returns (output, new_cache).
+    """
+    if mode == "causal":
+        q = _project_q(p, cfg, x, positions, use_rope=use_rope)
+        k, v = _project_kv(p, cfg, x, positions, use_rope=use_rope)
+        o = sdpa(q, k, v, causal=True, window=window)
+        new_cache = None
+        if cache is not None:   # prefill: write into the cache
+            new_cache = {
+                "k": _cache_write_prefill(cache["k"], k),
+                "v": _cache_write_prefill(cache["v"], v),
+            }
+    elif mode == "full":
+        q = _project_q(p, cfg, x, positions, use_rope=use_rope)
+        k, v = _project_kv(p, cfg, x, positions, use_rope=use_rope)
+        o = sdpa(q, k, v, causal=False, window=None)
+        new_cache = None
+    elif mode == "cross":
+        q = _project_q(p, cfg, x, None, use_rope=False)
+        k, v = _project_kv(p, cfg, kv_x, None, use_rope=False)
+        o = sdpa(q, k, v, causal=False, window=None)
+        new_cache = {"k": k, "v": v}
+    elif mode == "cross_decode":
+        q = _project_q(p, cfg, x, None, use_rope=False)
+        o = sdpa(q, cache["k"], cache["v"], causal=False, window=None)
+        new_cache = cache
+    elif mode == "decode":
+        q = _project_q(p, cfg, x, positions, use_rope=use_rope)
+        k, v = _project_kv(p, cfg, x, positions, use_rope=use_rope)
+        # write the new token at index `pos` (scalar; engine keeps
+        # sequences aligned — see repro.serve for the batching contract).
+        # Window caches are ring buffers of size `window`: slot = pos % S.
+        S = cache["k"].shape[1]
+        write_idx = pos % S
+        k_cache = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), write_idx, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), write_idx, axis=1)
+        kpos = jnp.arange(S)
+        # ring: slot s last written at pos - ((pos - s) mod S); valid if >= 0.
+        # linear (S covers the full sequence): valid iff s <= pos.
+        valid = (pos - (pos - kpos) % S) >= 0
+        if window is not None:
+            valid &= (pos - kpos) % S < window
+        o = sdpa_decode(q, k_cache, v_cache, valid)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        raise ValueError(mode)
+    o = constrain(o, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(o.dtype))
+    y = constrain(y, ("batch", "seq", None))
+    return y, new_cache
+
+
+def kv_cache_shape(cfg: ModelConfig, batch: int, max_len: int
+                   ) -> Tuple[Tuple[int, ...], Tuple[Optional[str], ...]]:
+    """Shape + logical axes of one direction (k or v) of a layer cache."""
+    eff = min(max_len, cfg.window) if cfg.window else max_len
+    return ((batch, eff, cfg.num_kv_heads, cfg.head_dim),
+            ("batch", None, "kv_heads", "head_dim"))
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / classic)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, *, d_ff: Optional[int] = None,
+              gated: bool = True) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    specs = {
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+    if gated:
+        specs["w_gate"] = ParamSpec((d, f), ("embed", "mlp"))
+    return specs
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def mlp_apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("btd,df->btf", x, p["w_up"].astype(x.dtype))
+    h = constrain(h, ("batch", "seq", "mlp"))
+    if "w_gate" in p:
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(x.dtype))
+        g = constrain(g, ("batch", "seq", "mlp"))
+        h = _act(g, cfg.act) * h
+    else:
+        h = _act(h, cfg.act)
+    y = jnp.einsum("btf,fd->btd", h, p["w_down"].astype(x.dtype))
+    return constrain(y, ("batch", "seq", None))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based dispatch with capacity, EP-shardable)
+# ---------------------------------------------------------------------------
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    f = cfg.moe_d_ff if cfg.moe_d_ff is not None else cfg.d_ff
+    E = cfg.num_experts
+    specs = {
+        "router": ParamSpec((d, E), ("embed", None), scale=0.02),
+        "w_gate": ParamSpec((E, d, f), ("experts", "embed", "mlp")),
+        "w_up": ParamSpec((E, d, f), ("experts", "embed", "mlp")),
+        "w_down": ParamSpec((E, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.shared_expert:
+        specs["shared"] = mlp_specs(cfg, d_ff=f, gated=True)
+    return specs
+
+
+def _positions_in_expert(expert_flat: jax.Array) -> jax.Array:
+    """Rank of each (token, k) slot within its expert's arrival order.
+
+    expert_flat: (N,) int32 expert ids.  Returns (N,) int32 positions,
+    computed with an argsort + segmented-iota (O(N log N), no (N, E)
+    one-hot tensors).
+    """
+    n = expert_flat.shape[0]
+    order = jnp.argsort(expert_flat, stable=True)
+    sorted_e = expert_flat[order]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]])
+    start_iota = jnp.where(seg_start, iota, 0)
+    run_start = lax.cummax(start_iota)
+    pos_sorted = iota - run_start
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+
+
+def moe_apply(p, cfg: ModelConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE with per-sequence-group capacity.  Returns (y, aux_loss)."""
+    B, T, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    f = cfg.moe_d_ff if cfg.moe_d_ff is not None else cfg.d_ff
+    C = max(1, int(math.ceil(T * K / E * cfg.capacity_factor)))
+
+    logits = jnp.einsum("btd,de->bte", x, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if K == 1:   # sigmoid router (llama4-style top-1 + shared expert)
+        probs = jax.nn.sigmoid(logits)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, K)                      # (B, T, K)
+    if K > 1:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    idx_flat = idx.reshape(B, T * K)
+    pos = jax.vmap(_positions_in_expert)(idx_flat)        # (B, T*K)
+    keep = pos < C
+    slot = jnp.where(keep, idx_flat * C + pos, E * C)     # overflow bucket
+
+    x_tk = jnp.repeat(x, K, axis=1)                       # (B, T*K, d)
+
+    def scatter_row(slots_r, x_r):
+        return jnp.zeros((E * C + 1, d), x.dtype).at[slots_r].add(x_r)
+    xe = jax.vmap(scatter_row)(slot, x_tk)[:, :E * C]     # (B, E*C, d)
+    xe = xe.reshape(B, E, C, d)
+    xe = constrain(xe, ("batch", "experts", None, None))
+
+    g = jnp.einsum("becd,edf->becf", xe, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", xe, p["w_up"].astype(x.dtype))
+    h = _act(g, cfg.act) * u
+    h = constrain(h, ("batch", "experts", None, "mlp"))
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+    ye = constrain(ye, ("batch", "experts", None, None))
+
+    ye_flat = jnp.concatenate(
+        [ye.reshape(B, E * C, d),
+         jnp.zeros((B, 1, d), ye.dtype)], axis=1)          # (B, E*C+1, d)
+    y_tk = jnp.take_along_axis(ye_flat, slot[..., None], axis=1)
+    w = (gates.reshape(B, T * K) * keep).astype(x.dtype)
+    y = (y_tk * w[..., None]).reshape(B, T, K, d).sum(axis=2)
+
+    if cfg.shared_expert:
+        y = y + mlp_apply(p["shared"], cfg, x)
+
+    # Switch-style load-balance auxiliary loss
+    me = jax.nn.softmax(logits, axis=-1).mean(axis=(0, 1))           # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx_flat.reshape(-1)].add(
+        1.0 / (B * T * K))
+    aux = E * jnp.sum(me * ce)
+    return y, aux

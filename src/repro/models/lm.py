@@ -1,0 +1,448 @@
+"""Decoder-only language model covering dense / MoE / hybrid / SSM / VLM
+families, assembled from repro.models.layers + repro.models.recurrent.
+
+Design notes
+------------
+* **Scan over layer cycles.**  The stack is grouped into its smallest
+  repeating cycle (lcm of the block pattern and the MoE period); parameters
+  are stacked with a leading ``(n_cycles,)`` dim and the forward pass is a
+  single ``lax.scan`` — HLO size is O(cycle), not O(depth), which keeps
+  512-device dry-run compiles fast for 48-layer models.  Remainder layers
+  (e.g. RecurrentGemma's 38 = 12*3 + 2) run unscanned.
+* **Three entry modes.**  ``train`` (causal, no cache), ``prefill``
+  (causal, writes KV/recurrent state), ``decode`` (one token, reads+writes
+  state).  States are specified as ParamSpec trees so the dry-run can build
+  shardings without allocating.
+* **Frontends are stubs** per the assignment: VLM/audio batches carry
+  precomputed patch/frame embeddings which are concatenated (VLM) or fed to
+  the encoder (audio enc-dec, see repro.models.encdec).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import recurrent as R
+from repro.models import settings as settings_lib
+from repro.sharding.ctx import constrain
+from repro.models.types import ModelConfig, ParamSpec, SpecTree, init_params
+
+AUX_LOSS_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-4
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    kind: str                   # "attn" | "rec" | "rwkv"
+    moe: bool = False
+    window: Optional[int] = None
+    cross: bool = False         # decoder layer with cross-attention
+
+
+def layer_plans(cfg: ModelConfig, *, cross: bool = False) -> List[LayerPlan]:
+    plans = []
+    for i in range(cfg.num_layers):
+        kind = cfg.block_kind(i)
+        window = cfg.window if (kind == "attn" and cfg.window) else None
+        plans.append(LayerPlan(kind=kind, moe=cfg.is_moe_layer(i),
+                               window=window, cross=cross))
+    return plans
+
+
+def _cycle_len(cfg: ModelConfig) -> int:
+    period = cfg.moe_period if cfg.num_experts else 1
+    return math.lcm(len(cfg.block_pattern), period)
+
+
+# ---------------------------------------------------------------------------
+# per-layer specs / apply
+# ---------------------------------------------------------------------------
+
+def block_specs(cfg: ModelConfig, plan: LayerPlan) -> SpecTree:
+    s: Dict[str, Any] = {"ln1": L.norm_specs(cfg), "ln2": L.norm_specs(cfg)}
+    if plan.kind == "attn":
+        s["attn"] = L.attn_specs(cfg)
+    elif plan.kind == "rec":
+        s["rec"] = R.rglru_block_specs(cfg)
+    elif plan.kind == "rwkv":
+        s["tm"] = R.rwkv_time_mix_specs(cfg)
+        s["cm"] = R.rwkv_channel_mix_specs(cfg)
+    else:
+        raise ValueError(plan.kind)
+    if plan.cross:
+        s["ln_cross"] = L.norm_specs(cfg)
+        s["cross"] = L.attn_specs(cfg, cross=True)
+    if plan.kind != "rwkv":
+        if plan.moe:
+            s["moe"] = L.moe_specs(cfg)
+        else:
+            s["mlp"] = L.mlp_specs(cfg, gated=cfg.gated_mlp)
+    return s
+
+
+def block_cache_specs(cfg: ModelConfig, plan: LayerPlan, batch: int,
+                      max_len: int, enc_len: int = 0) -> SpecTree:
+    """ParamSpec tree for this layer's decode state."""
+    s: Dict[str, Any] = {}
+    cdt = cfg.compute_dtype
+    if plan.kind == "attn":
+        shape, axes = L.kv_cache_shape(cfg, batch, max_len)
+        s["k"] = ParamSpec(shape, axes, init="zeros", dtype=cdt)
+        s["v"] = ParamSpec(shape, axes, init="zeros", dtype=cdt)
+    elif plan.kind == "rec":
+        shapes = R.rglru_state_shapes(cfg, batch)
+        s["h"] = ParamSpec(shapes["h"][0], shapes["h"][1], init="zeros",
+                           dtype=jnp.float32)
+        s["conv"] = ParamSpec(shapes["conv"][0], shapes["conv"][1],
+                              init="zeros", dtype=cdt)
+    elif plan.kind == "rwkv":
+        shapes = R.rwkv_state_shapes(cfg, batch)
+        s["tm_shift"] = ParamSpec(shapes["tm_shift"][0], shapes["tm_shift"][1],
+                                  init="zeros", dtype=cdt)
+        s["wkv"] = ParamSpec(shapes["wkv"][0], shapes["wkv"][1], init="zeros",
+                             dtype=jnp.float32)
+        s["cm_shift"] = ParamSpec(shapes["cm_shift"][0], shapes["cm_shift"][1],
+                                  init="zeros", dtype=cdt)
+    if plan.cross:
+        xshape = (batch, enc_len, cfg.num_kv_heads, cfg.head_dim)
+        xaxes = ("batch", None, "kv_heads", "head_dim")
+        s["xk"] = ParamSpec(xshape, xaxes, init="zeros", dtype=cdt)
+        s["xv"] = ParamSpec(xshape, xaxes, init="zeros", dtype=cdt)
+    return s
+
+
+def block_apply(cfg: ModelConfig, plan: LayerPlan, p, x, *, mode: str,
+                positions=None, cache=None, pos=None, enc_out=None):
+    """Returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    cache = cache or {}
+    norm_kind = cfg.norm
+
+    if plan.kind == "attn":
+        h = L.norm_apply(p["ln1"], x, norm_kind)
+        if mode in ("train", "prefill"):
+            attn_cache = {"k": cache["k"], "v": cache["v"]} if "k" in cache else None
+            y, nc = L.attn_apply(p["attn"], cfg, h, mode="causal",
+                                 positions=positions, window=plan.window,
+                                 cache=attn_cache)
+            if nc is not None:
+                new_cache.update(nc)
+        elif mode == "encode":
+            y, _ = L.attn_apply(p["attn"], cfg, h, mode="full",
+                                positions=positions)
+        else:  # decode
+            y, nc = L.attn_apply(p["attn"], cfg, h, mode="decode",
+                                 positions=positions, window=plan.window,
+                                 cache={"k": cache["k"], "v": cache["v"]},
+                                 pos=pos)
+            new_cache.update(nc)
+        x = x + y
+    elif plan.kind == "rec":
+        h = L.norm_apply(p["ln1"], x, norm_kind)
+        state = None
+        if "h" in cache:
+            state = {"h": cache["h"], "conv": cache["conv"]}
+        y, ns = R.rglru_block_apply(p["rec"], cfg, h, state=state)
+        if ns is not None:
+            new_cache.update(ns)
+        x = x + y
+    elif plan.kind == "rwkv":
+        h = L.norm_apply(p["ln1"], x, "layernorm")
+        st = {"shift": cache["tm_shift"], "wkv": cache["wkv"]} \
+            if "wkv" in cache else None
+        y, ns = R.rwkv_time_mix_apply(p["tm"], cfg, h, state=st)
+        if ns is not None:
+            new_cache["tm_shift"] = ns["shift"]
+            new_cache["wkv"] = ns["wkv"]
+        x = x + y
+        h = L.norm_apply(p["ln2"], x, "layernorm")
+        st = {"shift": cache["cm_shift"]} if "cm_shift" in cache else None
+        y, ns = R.rwkv_channel_mix_apply(p["cm"], cfg, h, state=st)
+        if ns is not None:
+            new_cache["cm_shift"] = ns["shift"]
+        x = x + y
+        return x, aux, new_cache
+
+    if plan.cross:
+        h = L.norm_apply(p["ln_cross"], x, norm_kind)
+        if mode in ("train", "prefill"):
+            y, nc = L.attn_apply(p["cross"], cfg, h, mode="cross",
+                                 kv_x=enc_out)
+            if mode == "prefill":
+                new_cache["xk"], new_cache["xv"] = nc["k"], nc["v"]
+        else:
+            y, _ = L.attn_apply(p["cross"], cfg, h, mode="cross_decode",
+                                cache={"k": cache["xk"], "v": cache["xv"]})
+            new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+        x = x + y
+
+    h = L.norm_apply(p["ln2"], x, norm_kind)
+    if plan.moe:
+        y, aux = L.moe_apply(p["moe"], cfg, h)
+    else:
+        y = L.mlp_apply(p["mlp"], cfg, h)
+    x = x + y
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+def _stack_specs(cfg: ModelConfig, plans: List[LayerPlan]) -> SpecTree:
+    cyc = _cycle_len(cfg)
+    n_cycles, rem = divmod(len(plans), cyc)
+
+    def stacked(spec: ParamSpec) -> ParamSpec:
+        return ParamSpec((n_cycles,) + spec.shape, ("layers",) + spec.axes,
+                         init=spec.init, scale=spec.scale, dtype=spec.dtype)
+
+    tree: Dict[str, Any] = {"cycles": {}, "rem": {}}
+    if n_cycles:
+        for i in range(cyc):
+            spec = block_specs(cfg, plans[i])
+            tree["cycles"][f"b{i}"] = jax.tree_util.tree_map(
+                stacked, spec, is_leaf=lambda s: isinstance(s, ParamSpec))
+    for j in range(rem):
+        tree["rem"][f"r{j}"] = block_specs(cfg, plans[n_cycles * cyc + j])
+    return tree
+
+
+def _stack_cache_specs(cfg: ModelConfig, plans: List[LayerPlan], batch: int,
+                       max_len: int, enc_len: int = 0) -> SpecTree:
+    cyc = _cycle_len(cfg)
+    n_cycles, rem = divmod(len(plans), cyc)
+
+    def stacked(spec: ParamSpec) -> ParamSpec:
+        return ParamSpec((n_cycles,) + spec.shape, ("layers",) + spec.axes,
+                         init="zeros", dtype=spec.dtype)
+
+    tree: Dict[str, Any] = {"cycles": {}, "rem": {}}
+    if n_cycles:
+        for i in range(cyc):
+            spec = block_cache_specs(cfg, plans[i], batch, max_len, enc_len)
+            tree["cycles"][f"b{i}"] = jax.tree_util.tree_map(
+                stacked, spec, is_leaf=lambda s: isinstance(s, ParamSpec))
+    for j in range(rem):
+        tree["rem"][f"r{j}"] = block_cache_specs(
+            cfg, plans[n_cycles * cyc + j], batch, max_len, enc_len)
+    return tree
+
+
+def _stack_apply(cfg: ModelConfig, plans: List[LayerPlan], params, x, *,
+                 mode: str, positions=None, caches=None, pos=None,
+                 enc_out=None, remat: bool = True):
+    """Run the layer stack.  Returns (x, aux_sum, new_caches)."""
+    cyc = _cycle_len(cfg)
+    n_cycles, rem = divmod(len(plans), cyc)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {"cycles": {}, "rem": {}}
+
+    if n_cycles:
+        has_cache = caches is not None
+        xs_cache = caches["cycles"] if has_cache else {
+            f"b{i}": {} for i in range(cyc)}
+
+        def cycle_body(carry, xs):
+            xc, aux = carry
+            p_cyc, c_cyc = xs
+            outs = {}
+            for i in range(cyc):
+                xc, aux_i, nc = block_apply(
+                    cfg, plans[i], p_cyc[f"b{i}"], xc, mode=mode,
+                    positions=positions, cache=c_cyc[f"b{i}"] or None,
+                    pos=pos, enc_out=enc_out)
+                xc = constrain(xc, ("batch", "seq", None))
+                aux = aux + aux_i
+                outs[f"b{i}"] = nc
+            return (xc, aux), outs
+
+        if mode == "train" and remat:
+            cycle_body = jax.checkpoint(
+                cycle_body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux_total), cyc_caches = lax.scan(
+            cycle_body, (x, aux_total), (params["cycles"], xs_cache),
+            unroll=min(settings_lib.get().layer_unroll, n_cycles))
+        new_caches["cycles"] = cyc_caches
+
+    for j in range(rem):
+        plan = plans[n_cycles * cyc + j]
+        cache_j = caches["rem"][f"r{j}"] if caches is not None else None
+        x, aux_j, nc = block_apply(cfg, plan, params["rem"][f"r{j}"], x,
+                                   mode=mode, positions=positions,
+                                   cache=cache_j, pos=pos, enc_out=enc_out)
+        aux_total = aux_total + aux_j
+        new_caches["rem"][f"r{j}"] = nc
+    return x, aux_total, new_caches
+
+
+def fused_xent(params_embed, cfg: ModelConfig, x: jax.Array,
+               labels: jax.Array, chunk: int):
+    """Fused head-matmul + cross-entropy over vocab chunks.
+
+    Computes per-token (logsumexp, label-logit) without materialising the
+    (B, T, V) f32 logits tensor: each chunk's logits live only inside a
+    rematerialised scan step.  Returns (lse, ll) as (B, T) f32.
+    """
+    if cfg.tie_embeddings:
+        w = params_embed["embedding"].astype(cfg.compute_dtype).T
+    else:
+        w = params_embed["head"].astype(cfg.compute_dtype)
+    V = w.shape[1]
+    chunk = min(chunk, V)
+    n = -(-V // chunk)
+    pad = n * chunk - V
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    w_chunks = w.reshape(w.shape[0], n, chunk).transpose(1, 0, 2)
+    # keep the vocab sharding through the reshape (chunk dim still shards)
+    w_chunks = constrain(w_chunks, (None, "embed", "vocab"))
+
+    @jax.checkpoint
+    def step(carry, inp):
+        m, s, ll = carry
+        w_c, idx = inp                               # (d, chunk), chunk id
+        logits = jnp.einsum("btd,dv->btv", x, w_c).astype(jnp.float32)
+        logits = constrain(logits, ("batch", "seq", "vocab"))
+        vpos = idx * chunk + jnp.arange(chunk)
+        logits = jnp.where((vpos < V)[None, None, :], logits, -1e30)
+        m_c = logits.max(-1)
+        m_new = jnp.maximum(m, m_c)
+        s = s * jnp.exp(m - m_new) + jnp.exp(logits - m_new[..., None]).sum(-1)
+        in_chunk = (labels >= idx * chunk) & (labels < (idx + 1) * chunk)
+        local = jnp.clip(labels - idx * chunk, 0, chunk - 1)
+        picked = jnp.take_along_axis(logits, local[..., None], axis=-1)[..., 0]
+        ll = jnp.where(in_chunk, picked, ll)
+        return (m_new, s, ll), None
+
+    B, T = labels.shape
+    m0 = jnp.full((B, T), -1e30, jnp.float32)
+    s0 = jnp.zeros((B, T), jnp.float32)
+    ll0 = jnp.zeros((B, T), jnp.float32)
+    # analysis passes unroll so HloCostAnalysis sees every chunk (§Dry-run)
+    unroll = n if settings_lib.get().unroll_attn else 1
+    (m, s, ll), _ = lax.scan(step, (m0, s0, ll0),
+                             (w_chunks, jnp.arange(n)), unroll=unroll)
+    lse = m + jnp.log(jnp.maximum(s, 1e-30))
+    return lse, ll
+
+
+class LM:
+    """Decoder-only LM (dense / MoE / hybrid / SSM / VLM backbones)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.plans = layer_plans(cfg)
+
+    # -- specs -----------------------------------------------------------------
+    def param_specs(self) -> SpecTree:
+        cfg = self.cfg
+        return {
+            "embed": L.embed_specs(cfg),
+            "final_norm": L.norm_specs(cfg),
+            "stack": _stack_specs(cfg, self.plans),
+        }
+
+    def state_specs(self, batch: int, max_len: int) -> SpecTree:
+        return _stack_cache_specs(self.cfg, self.plans, batch, max_len)
+
+    def init(self, key: jax.Array):
+        return init_params(self.param_specs(), key, self.cfg.compute_dtype)
+
+    def init_state(self, batch: int, max_len: int):
+        return init_params(self.state_specs(batch, max_len),
+                           jax.random.PRNGKey(0))
+
+    # -- embedding (with optional frontend embeds prepended) --------------------
+    def _embed(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], cfg, batch["tokens"])
+        x = x * math.sqrt(cfg.d_model)
+        if cfg.frontend and "frontend_embeds" in batch:
+            fe = batch["frontend_embeds"].astype(x.dtype)
+            x = jnp.concatenate([fe, x], axis=1)
+        return x
+
+    # -- train forward + loss ----------------------------------------------------
+    def forward(self, params, batch: Dict[str, jax.Array], *,
+                remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, T = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        x, aux, _ = _stack_apply(cfg, self.plans, params["stack"], x,
+                                 mode="train", positions=positions,
+                                 remat=remat)
+        x = L.norm_apply(params["final_norm"], x, cfg.norm)
+        logits = L.head_apply(params["embed"], cfg, x)
+        return logits, aux
+
+    def loss(self, params, batch: Dict[str, jax.Array], *,
+             remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """batch["labels"]: (B, T_total) int32, -1 = masked position."""
+        cfg = self.cfg
+        labels = batch["labels"]
+        vchunk = settings_lib.get().vocab_chunk
+        if vchunk:
+            # fused path: never materialise (B, T, V) logits
+            x = self._embed(params, batch)
+            B, T = x.shape[0], x.shape[1]
+            positions = jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32), (B, T))
+            x, aux, _ = _stack_apply(cfg, self.plans, params["stack"], x,
+                                     mode="train", positions=positions,
+                                     remat=remat)
+            x = L.norm_apply(params["final_norm"], x, cfg.norm)
+            lse, ll = fused_xent(params["embed"], cfg, x,
+                                 jnp.maximum(labels, 0), vchunk)
+        else:
+            logits, aux = self.forward(params, batch, remat=remat)
+            logits = logits.astype(jnp.float32)
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(
+                logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        denom = jnp.maximum(mask.sum(), 1.0)
+        xent = jnp.sum((lse - ll) * mask) / denom
+        z_loss = Z_LOSS_WEIGHT * jnp.sum(jnp.square(lse) * mask) / denom
+        total = xent + z_loss + AUX_LOSS_WEIGHT * aux
+        return total, {"xent": xent, "z_loss": z_loss, "aux": aux,
+                       "tokens": mask.sum()}
+
+    # -- serving ------------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, jax.Array], state):
+        """Run the prompt through the stack, filling caches.
+
+        Returns (last-position logits, new state)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, T = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        x, _, new_state = _stack_apply(cfg, self.plans, params["stack"], x,
+                                       mode="prefill", positions=positions,
+                                       caches=state, remat=False)
+        x = L.norm_apply(params["final_norm"], x[:, -1:], cfg.norm)
+        logits = L.head_apply(params["embed"], cfg, x)
+        return logits[:, 0], new_state
+
+    def decode_step(self, params, token: jax.Array, pos: jax.Array, state):
+        """One decode step.  token: (B,) int32; pos: scalar int32 index at
+        which the new token is written (cache entries [0, pos] valid)."""
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], cfg, token[:, None])
+        x = x * math.sqrt(cfg.d_model)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        x, _, new_state = _stack_apply(cfg, self.plans, params["stack"], x,
+                                       mode="decode", positions=positions,
+                                       caches=state, pos=pos, remat=False)
+        x = L.norm_apply(params["final_norm"], x, cfg.norm)
+        logits = L.head_apply(params["embed"], cfg, x)
+        return logits[:, 0], new_state

@@ -1,0 +1,317 @@
+"""Recurrent sequence-mixing blocks: RG-LRU (RecurrentGemma) and RWKV-6.
+
+Both are linear recurrences with O(1) decode state — which is exactly why
+the `long_500k` assigned shape runs on these two families only (DESIGN.md
+§5).  Training uses parallel forms (associative scan for RG-LRU; a
+chunk-rematerialised scan for RWKV-6); decoding is a single-step state
+update.  The RWKV-6 inner recurrence has a Pallas TPU kernel
+(`repro.kernels.rwkv6_scan`) with this module's `wkv6_scan_ref`-equivalent
+as its oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.types import ModelConfig, ParamSpec
+from repro.models.layers import _act, norm_specs
+from repro.models import settings as settings_lib
+from repro.sharding.ctx import constrain
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def rglru_block_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        # two input branches: gate (gelu) and recurrent
+        "w_in_gate": ParamSpec((d, w), ("embed", "mlp")),
+        "w_in_rec": ParamSpec((d, w), ("embed", "mlp")),
+        # temporal conv over the recurrent branch (depthwise)
+        "conv_w": ParamSpec((cfg.conv_width, w), (None, "mlp"), scale=0.1),
+        "conv_b": ParamSpec((w,), ("mlp",), init="zeros"),
+        # RG-LRU gates
+        "w_a": ParamSpec((w, w), ("mlp", None)),
+        "b_a": ParamSpec((w,), (None,), init="zeros"),
+        "w_x": ParamSpec((w, w), ("mlp", None)),
+        "b_x": ParamSpec((w,), (None,), init="zeros"),
+        "lam": ParamSpec((w,), (None,), init="uniform"),
+        "w_out": ParamSpec((w, d), ("mlp", "embed")),
+    }
+
+
+def _rglru_gates(p, xc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """log a_t (per channel) and gated input, both f32."""
+    x32 = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(x32 @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    gated = i * x32
+    return log_a, gated
+
+
+def _depthwise_conv(p, x: jax.Array, state: Optional[jax.Array]
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Causal depthwise temporal conv, width W.  x: (B,T,w).
+
+    state: (B, W-1, w) past inputs (decode) or None (train: zero history).
+    Returns (y, new_state)."""
+    W = p["conv_w"].shape[0]
+    B, T, w = x.shape
+    if state is None:
+        state = jnp.zeros((B, W - 1, w), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # (B, T+W-1, w)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        y = y + xp[:, i:i + T].astype(jnp.float32) * p["conv_w"][i].astype(jnp.float32)
+    y = (y + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, T:]                               # last W-1 inputs
+    return y, new_state
+
+
+def rglru_scan(log_a: jax.Array, gated: jax.Array,
+               h0: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * gated_t, via associative scan.
+
+    log_a, gated: (B, T, w) f32.  h0: (B, w) initial state or None.
+    Returns (h (B,T,w), final state (B,w))."""
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_block_apply(p, cfg: ModelConfig, x: jax.Array, *,
+                      state: Optional[Dict[str, jax.Array]] = None
+                      ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """The full RecurrentGemma recurrent block.  x: (B,T,d).
+
+    state = {"h": (B,w), "conv": (B,conv_width-1,w)} for decode, else None.
+    """
+    gate = _act(jnp.einsum("btd,dw->btw", x, p["w_in_gate"].astype(x.dtype)),
+                "gelu")
+    gate = constrain(gate, ("batch", "seq", "mlp"))
+    rec = jnp.einsum("btd,dw->btw", x, p["w_in_rec"].astype(x.dtype))
+    rec = constrain(rec, ("batch", "seq", "mlp"))
+    conv_state = state["conv"] if state is not None else None
+    rec, new_conv = _depthwise_conv(p, rec, conv_state)
+    log_a, gated = _rglru_gates(p, rec)
+    h0 = state["h"] if state is not None else None
+    h, h_last = rglru_scan(log_a, gated, h0)
+    y = (h.astype(x.dtype) * gate)
+    y = jnp.einsum("btw,wd->btd", y, p["w_out"].astype(x.dtype))
+    new_state = {"h": h_last, "conv": new_conv} if state is not None else None
+    return y, new_state
+
+
+def rglru_state_shapes(cfg: ModelConfig, batch: int) -> Dict[str, Tuple]:
+    w = cfg.lru_width
+    return {
+        "h": ((batch, w), ("batch", "mlp"), jnp.float32),
+        "conv": ((batch, cfg.conv_width - 1, w), ("batch", None, "mlp"), None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 ("Finch"): data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+def rwkv_time_mix_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = d // N
+    lora = 32
+    return {
+        # data-dependent token-shift (ddlerp) parameters
+        "maa_x": ParamSpec((d,), (None,), init="zeros"),
+        "maa_wkvrg": ParamSpec((5, d), (None, None), init="zeros"),
+        "tm_w1": ParamSpec((d, 5 * lora), ("embed", None), scale=0.02),
+        "tm_w2": ParamSpec((5, lora, d), (None, None, "embed"), scale=0.02),
+        # data-dependent decay
+        "decay_base": ParamSpec((d,), (None,), init="uniform"),
+        "td_w1": ParamSpec((d, 64), ("embed", None), scale=0.02),
+        "td_w2": ParamSpec((64, d), (None, "embed"), scale=0.02),
+        # per-(head,channel) bonus for the current token
+        "u": ParamSpec((H, N), ("heads", None), scale=0.5),
+        "wr": ParamSpec((d, d), ("embed", "heads_flat")),
+        "wk": ParamSpec((d, d), ("embed", "heads_flat")),
+        "wv": ParamSpec((d, d), ("embed", "heads_flat")),
+        "wg": ParamSpec((d, d), ("embed", "heads_flat")),
+        "wo": ParamSpec((d, d), ("heads_flat", "embed")),
+        "ln_scale": ParamSpec((d,), (None,), init="ones"),
+        "ln_bias": ParamSpec((d,), (None,), init="zeros"),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} per position; `prev` is the carried last token (decode)."""
+    B, T, d = x.shape
+    if prev is None:
+        prev = jnp.zeros((B, d), x.dtype)
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x: jax.Array, x_prev: jax.Array):
+    """RWKV-6 data-dependent interpolation producing 5 mixed inputs."""
+    diff = x_prev - x
+    xx = x + diff * p["maa_x"].astype(x.dtype)
+    lora = jnp.einsum("btd,dk->btk", xx, p["tm_w1"].astype(x.dtype))
+    B, T, _ = x.shape
+    lora = jnp.tanh(lora.reshape(B, T, 5, -1))
+    mix = jnp.einsum("btfk,fkd->btfd", lora, p["tm_w2"].astype(x.dtype))
+    mix = mix + p["maa_wkvrg"].astype(x.dtype)[None, None]
+    return x[:, :, None, :] + diff[:, :, None, :] * mix   # (B,T,5,d)
+
+
+def wkv6_scan_ref(r, k, v, w, u, s0):
+    """Exact sequential RWKV-6 recurrence (the oracle).
+
+    r,k,v: (B,T,H,N); w: (B,T,H,N) decay in (0,1); u: (H,N);
+    s0: (B,H,N,N) initial state.  Returns (y (B,T,H,N), s_T).
+
+        y_t = (s_{t-1} + (u * k_t) outer v_t)^T r_t
+        s_t = diag(w_t) s_{t-1} + k_t outer v_t
+    """
+    r, k, v, w = (a.astype(jnp.float32) for a in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp    # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    s_T, ys = lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), s_T
+
+
+def wkv6_scan_chunked(r, k, v, w, u, s0, *, chunk: Optional[int] = None):
+    """Chunk-rematerialised scan: O(T/chunk) saved states for backward."""
+    B, T, H, N = r.shape
+    c = min(chunk if chunk is not None else settings_lib.get().wkv_chunk, T)
+    if T % c:
+        c = T  # fall back for ragged tails (smoke-test sizes)
+    nc = T // c
+
+    def body(s, inp):
+        rc, kc, vc, wc = inp
+        y, s1 = _wkv6_chunk_remat(rc, kc, vc, wc, u, s)
+        return s1, y
+
+    xs = tuple(a.reshape(B, nc, c, H, N).transpose(1, 0, 2, 3, 4)
+               for a in (r, k, v, w))
+    sT, ys = lax.scan(body, s0.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, N)
+    return y, sT
+
+
+@jax.checkpoint
+def _wkv6_chunk_remat(rc, kc, vc, wc, u, s):
+    return wkv6_scan_ref(rc, kc, vc, wc, u, s)
+
+
+def rwkv_time_mix_apply(p, cfg: ModelConfig, x: jax.Array, *,
+                        state: Optional[Dict[str, jax.Array]] = None,
+                        wkv_fn=None,
+                        ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """RWKV-6 time mix.  state = {"shift": (B,d), "wkv": (B,H,N,N)}."""
+    B, T, d = x.shape
+    N = cfg.rwkv_head_dim
+    H = d // N
+    prev = state["shift"] if state is not None else None
+    x_prev = _token_shift(x, prev)
+    mixed = _ddlerp(p, x, x_prev)                        # (B,T,5,d)
+    xw, xk, xv, xr, xg = (mixed[:, :, i] for i in range(5))
+
+    r = jnp.einsum("btd,de->bte", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("btd,de->bte", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,de->bte", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("btd,de->bte", xg, p["wg"].astype(x.dtype))
+
+    dd = jnp.einsum("btd,dk->btk", xw, p["td_w1"].astype(x.dtype))
+    dd = jnp.einsum("btk,kd->btd", jnp.tanh(dd), p["td_w2"].astype(x.dtype))
+    log_w = -jnp.exp(
+        (p["decay_base"].astype(jnp.float32) - 4.0) + dd.astype(jnp.float32))
+    w = jnp.exp(log_w)                                   # decay in (0,1)
+
+    shp = (B, T, H, N)
+    r_, k_, v_, w_ = (a.reshape(shp) for a in (r, k, v, w))
+    s0 = state["wkv"] if state is not None else jnp.zeros((B, H, N, N),
+                                                          jnp.float32)
+    fn = wkv_fn if wkv_fn is not None else (
+        wkv6_scan_ref if T == 1 else wkv6_scan_chunked)
+    y, sT = fn(r_, k_, v_, w_, p["u"], s0)
+
+    # per-head group norm, then output gate + projection
+    y = y.reshape(B, T, H, N).astype(jnp.float32)
+    mu = y.mean(-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(-1, keepdims=True)
+    y = (y - mu) * lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, T, d) * p["ln_scale"].astype(jnp.float32) \
+        + p["ln_bias"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    y = jnp.einsum("btd,de->bte", y, p["wo"].astype(x.dtype))
+
+    new_state = None
+    if state is not None:
+        new_state = {"shift": x[:, -1], "wkv": sT}
+    return y, new_state
+
+
+def rwkv_channel_mix_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamSpec((d,), (None,), init="zeros"),
+        "mu_r": ParamSpec((d,), (None,), init="zeros"),
+        "wk": ParamSpec((d, f), ("embed", "mlp")),
+        "wv": ParamSpec((f, d), ("mlp", "embed")),
+        "wr": ParamSpec((d, d), ("embed", None)),
+    }
+
+
+def rwkv_channel_mix_apply(p, cfg: ModelConfig, x: jax.Array, *,
+                           state: Optional[Dict[str, jax.Array]] = None
+                           ) -> Tuple[jax.Array, Optional[Dict]]:
+    prev = state["shift"] if state is not None else None
+    x_prev = _token_shift(x, prev)
+    diff = x_prev - x
+    xk = x + diff * p["mu_k"].astype(x.dtype)
+    xr = x + diff * p["mu_r"].astype(x.dtype)
+    kk = jnp.einsum("btd,df->btf", xk, p["wk"].astype(x.dtype))
+    kk = constrain(kk, ("batch", "seq", "mlp"))
+    kk = jnp.square(jax.nn.relu(kk))
+    kv = jnp.einsum("btf,fd->btd", kk, p["wv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(
+        jnp.einsum("btd,de->bte", xr, p["wr"].astype(x.dtype)))
+    y = rr * kv
+    new_state = {"shift": x[:, -1]} if state is not None else None
+    return y, new_state
+
+
+def rwkv_state_shapes(cfg: ModelConfig, batch: int) -> Dict[str, Tuple]:
+    d = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = d // N
+    return {
+        "tm_shift": ((batch, d), ("batch", None), None),
+        "wkv": ((batch, H, N, N), ("batch", "heads", None, None), jnp.float32),
+        "cm_shift": ((batch, d), ("batch", None), None),
+    }

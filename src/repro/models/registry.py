@@ -1,0 +1,11 @@
+"""Model construction from configs."""
+from __future__ import annotations
+
+from repro.models.encdec import EncDec
+from repro.models.lm import LM
+from repro.models.types import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    """LM for decoder-only families; EncDec when encoder_layers > 0."""
+    return EncDec(cfg) if cfg.is_encdec else LM(cfg)

@@ -1,0 +1,44 @@
+"""Thread-local model execution settings.
+
+The dry-run sets ``unroll_layers``/``unroll_attn`` so XLA's cost analysis
+sees straight-line HLO: while-loop bodies are counted ONCE by
+HloCostAnalysis (verified empirically: a 10-iteration scan of a matmul
+reports the same flops as one matmul), so loops would silently undercount
+FLOPs/bytes/collectives in the roofline.  Training/serving keep compact
+loop HLO (fast compiles); only the analysis path unrolls.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+
+@dataclasses.dataclass(frozen=True)
+class Settings:
+    layer_unroll: int = 1         # lax.scan unroll factor over layer cycles
+    unroll_attn: bool = False     # python loop instead of fori over kv chunks
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    wkv_chunk: int = 128
+    #: fused cross-entropy: compute head matmul + logsumexp over vocab
+    #: chunks so the (B, T, V) f32 logits tensor never materialises.
+    vocab_chunk: int = 0          # 0 = disabled (plain head + loss)
+
+
+_TLS = threading.local()
+_DEFAULT = Settings()
+
+
+def get() -> Settings:
+    return getattr(_TLS, "settings", _DEFAULT)
+
+
+@contextlib.contextmanager
+def use(**kwargs):
+    old = get()
+    _TLS.settings = dataclasses.replace(old, **kwargs)
+    try:
+        yield
+    finally:
+        _TLS.settings = old

@@ -1,0 +1,160 @@
+"""Model configuration and parameter-spec types.
+
+Parameters are plain nested dicts of ``jnp`` arrays.  A parallel tree of
+:class:`ParamSpec` carries shapes, dtypes, initialiser kinds and — crucially
+for the distribution layer — *logical axis names* per dimension, which
+:mod:`repro.sharding.rules` maps onto mesh axes.  Specs allow the dry-run to
+build shardings and ``jax.eval_shape`` parameter stand-ins without ever
+materialising a 400B-parameter model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Shape + logical axes + initialiser for one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"              # normal | zeros | ones | uniform
+    scale: Optional[float] = None     # stddev override (default: 1/sqrt(fan_in))
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def initialise(self, key: jax.Array, compute_dtype: Any) -> jax.Array:
+        dtype = compute_dtype if self.dtype is None else self.dtype
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "uniform":
+            return jax.random.uniform(key, self.shape, dtype, -1.0, 1.0)
+        fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+        scale = self.scale if self.scale is not None else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape) * scale).astype(dtype)
+
+
+SpecTree = Dict[str, Any]   # nested dict of ParamSpec leaves
+
+
+def init_params(specs: SpecTree, key: jax.Array,
+                compute_dtype: Any = jnp.float32) -> Dict[str, Any]:
+    """Materialise a parameter pytree from a spec tree (deterministic)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    arrs = [spec.initialise(k, compute_dtype) for spec, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def param_shapes(specs: SpecTree) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree (for jax.eval_shape / dry-run lowering)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def count_params(specs: SpecTree) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One configuration covering all assigned architecture families."""
+
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_period: int = 1         # MoE layer every k-th layer (llama4: 2)
+    moe_d_ff: Optional[int] = None
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0  # stablelm partial rotary
+    window: Optional[int] = None  # local-attention window
+
+    # layer pattern for hybrid/ssm stacks; cycled over the depth.
+    # entries: "attn" | "rec" (RG-LRU) | "rwkv"
+    block_pattern: Tuple[str, ...] = ("attn",)
+
+    # recurrent blocks
+    lru_width: Optional[int] = None    # RG-LRU width (default d_model)
+    conv_width: int = 4
+    rwkv_head_dim: int = 64
+
+    # encoder-decoder
+    encoder_layers: int = 0            # 0 = decoder-only
+
+    # modality frontend stubs (embeddings supplied by input pipeline)
+    frontend: Optional[str] = None     # None | "audio" | "vision"
+    frontend_len: int = 0              # frames/patches prepended or encoded
+
+    norm: str = "rmsnorm"              # rmsnorm | layernorm
+    act: str = "silu"                  # silu | gelu
+    gated_mlp: bool = True             # SwiGLU/GeGLU vs classic 2-matrix FFN
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.family in ("hybrid",) and self.lru_width is None:
+            object.__setattr__(self, "lru_width", self.d_model)
+
+    @property
+    def compute_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def block_kind(self, layer_idx: int) -> str:
+        """Kind of decoder layer ``layer_idx`` (cycled block pattern)."""
+        return self.block_pattern[layer_idx % len(self.block_pattern)]
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if self.num_experts == 0:
+            return False
+        # MoE on every moe_period-th layer, starting so the LAST layer is MoE
+        return (layer_idx % self.moe_period) == (self.moe_period - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input shape (workload geometry)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str      # "train" | "prefill" | "decode"
+
+    @property
+    def tokens_per_step(self) -> int:
+        if self.kind == "decode":
+            return self.global_batch   # one new token per sequence
+        return self.seq_len * self.global_batch

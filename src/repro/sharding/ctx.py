@@ -1,0 +1,45 @@
+"""Sharding context: logical activation constraints inside model code.
+
+GSPMD propagation alone mis-shards loop bodies (it replicated batch dims
+inside the attention fori_loop — observed as 'Involuntary full
+rematerialization' warnings and ~100 GB/device temps on the first dry-run).
+The fix, as in MaxText: the model annotates activations with *logical*
+axes, and a thread-local (rules, mesh) context resolves them to
+``with_sharding_constraint`` calls.  Without a context (CPU smoke tests)
+annotation is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+_TLS = threading.local()
+
+
+def current():
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def use(rules, mesh):
+    old = current()
+    _TLS.ctx = (rules, mesh)
+    try:
+        yield
+    finally:
+        _TLS.ctx = old
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate activation ``x`` with logical axes (no-op without context)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    from jax.sharding import NamedSharding
+    from repro.sharding.rules import spec_for
+    spec = spec_for(x.shape, tuple(axes), rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

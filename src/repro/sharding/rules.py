@@ -1,0 +1,194 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every parameter/state/activation dimension carries a *logical* axis name
+(see ParamSpec.axes).  A :class:`Rules` table maps logical names onto mesh
+axes; resolution is divisibility-safe: if a dimension is not divisible by
+the mapped mesh axes' total size, it falls back to replication (this is
+what makes e.g. llama4's 40 heads work on a 16-way model axis — attention
+weights replicate, experts/FFN still shard; the roofline analysis then
+shows the replicated-compute cost honestly).
+
+Parallelism coverage:
+  DP  — "batch" over ("pod", "data")
+  FSDP— "embed" over "data" (ZeRO-3 parameter/optimizer sharding)
+  TP  — "heads"/"kv_heads"/"mlp"/"vocab" over "model" (Megatron-style)
+  EP  — "experts" over "model"
+  SP  — "seq" over "data" (sequence sharding for long activations)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.types import ParamSpec
+
+AxisTarget = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: Mapping[str, AxisTarget]
+
+    def target(self, logical: Optional[str]) -> AxisTarget:
+        if logical is None:
+            return None
+        return self.table.get(logical)
+
+    def with_overrides(self, **kv: AxisTarget) -> "Rules":
+        t = dict(self.table)
+        t.update(kv)
+        return Rules(t)
+
+
+def production_rules(*, multi_pod: bool = False, fsdp: bool = True) -> Rules:
+    batch: AxisTarget = ("pod", "data") if multi_pod else ("data",)
+    return Rules({
+        "batch": batch,
+        "seq": None,
+        "embed": ("data",) if fsdp else None,
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        # fallback TP axis: shards attention when head counts do not divide
+        # the model axis (e.g. llama4's 40 heads on 16-way TP) — the
+        # used-once + divisibility logic in spec_for makes this automatic.
+        "head_dim": ("model",),
+        # rwkv time-mix keeps head-aligned channels replicated (40 heads x 64
+        # channels do not align with a 16-way split); channel-mix shards.
+        "heads_flat": None,
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "layers": None,
+    })
+
+
+def arch_overrides(cfg, tp: int, kind: str = "train") -> dict:
+    """Per-architecture rule overrides for a consistent attention scheme.
+
+    The generic divisibility fallback resolves each tensor independently,
+    which can leave q sharded on heads while k/v fall back to head_dim —
+    a per-layer resharding storm.  This chooses ONE scheme per arch:
+
+    * H % tp == 0 and G % tp == 0  -> shard heads (Megatron); head_dim off.
+    * H % tp == 0, G % tp != 0     -> shard q heads, REPLICATE kv
+      (classic MQA tensor-parallel) for train/prefill.  For decode the
+      replicated KV cache would blow HBM, so decode switches the whole
+      attention to head_dim sharding (scores psum per step instead).
+    * H % tp != 0 (e.g. llama4's 40 heads on tp=16) -> attention fully
+      replicated over the model axis (weights stay FSDP-sharded over data);
+      FFN/MoE/vocab still shard.  The roofline shows the duplicated-compute
+      cost honestly; the Flora mesh selector discovers that such archs
+      prefer a dp32xtp8 split (40 % 8 == 0) — see EXPERIMENTS.md §Perf.
+    """
+    H, G, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if H % tp == 0 and G % tp == 0:
+        return {"head_dim": None}
+    if H % tp == 0:
+        if kind == "decode" and D % tp == 0:
+            return {"heads": None, "kv_heads": None}
+        return {"head_dim": None}
+    if D % tp == 0 and kind == "decode":
+        return {"heads": None, "kv_heads": None}
+    return {"heads": None, "kv_heads": None, "head_dim": None}
+
+
+def _axes_size(mesh: Mesh, target: AxisTarget) -> int:
+    if target is None:
+        return 1
+    names = (target,) if isinstance(target, str) else tuple(target)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             rules: Rules, mesh: Mesh) -> P:
+    """PartitionSpec for one tensor, with divisibility fallback and
+    one-mesh-axis-used-once enforcement."""
+    used: set = set()
+    entries = []
+    for dim, logical in zip(shape, axes):
+        target = rules.target(logical)
+        if target is None:
+            entries.append(None)
+            continue
+        names = (target,) if isinstance(target, str) else tuple(target)
+        names = tuple(n for n in names if n in mesh.shape and n not in used)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        if not names or size <= 1 or dim % size != 0:
+            entries.append(None)
+            continue
+        used.update(names)
+        entries.append(names[0] if len(names) == 1 else names)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def sharding_for_spec(spec: ParamSpec, rules: Rules, mesh: Mesh
+                      ) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(spec.shape, spec.axes, rules, mesh))
+
+
+def tree_shardings(spec_tree: Any, rules: Rules, mesh: Mesh) -> Any:
+    """NamedSharding tree parallel to a ParamSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda s: sharding_for_spec(s, rules, mesh),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def batch_shardings(batch_specs: Mapping[str, jax.ShapeDtypeStruct],
+                    rules: Rules, mesh: Mesh) -> Dict[str, NamedSharding]:
+    """Shardings for input batches: leading dim = batch, rest replicated
+    (sequence sharding is opt-in via rules["seq"])."""
+    out = {}
+    for name, s in batch_specs.items():
+        if s.ndim == 0:
+            out[name] = NamedSharding(mesh, P())
+            continue
+        axes: list = ["batch"] + [None] * (s.ndim - 1)
+        if s.ndim >= 2 and rules.target("seq") is not None:
+            axes[1] = "seq"
+        out[name] = NamedSharding(mesh, spec_for(s.shape, axes, rules, mesh))
+    return out
+
+
+def describe(spec_tree: Any, rules: Rules, mesh: Mesh, *, max_rows: int = 0
+             ) -> str:
+    """Human-readable table of resolved shardings (debugging aid)."""
+    rows = []
+    leaves = jax.tree_util.tree_leaves_with_path(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    for path, s in leaves:
+        p = spec_for(s.shape, s.axes, rules, mesh)
+        rows.append(f"{jax.tree_util.keystr(path):60s} {str(s.shape):24s} {p}")
+    if max_rows:
+        rows = rows[:max_rows]
+    return "\n".join(rows)
+
+
+def bytes_per_device(spec_tree: Any, rules: Rules, mesh: Mesh) -> int:
+    """Parameter bytes resident per device under the resolved shardings."""
+    total = 0
+    leaves = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    for s in leaves:
+        p = spec_for(s.shape, s.axes, rules, mesh)
+        shard = 1
+        for entry in p:
+            shard *= _axes_size(mesh, entry)
+        n = int(np.prod(s.shape)) // max(shard, 1)
+        total += n * jnp_dtype_size(s.dtype)
+    return total
+
+
+def jnp_dtype_size(dtype) -> int:
+    return np.dtype(dtype).itemsize if not hasattr(dtype, "dtype") \
+        else np.dtype(dtype.dtype).itemsize

@@ -1,0 +1,185 @@
+"""Training step factory + host-side training loop.
+
+``make_train_step`` builds the jittable (params, opt_state, batch) ->
+(params, opt_state, metrics) function with optional microbatch gradient
+accumulation (lax.scan) and optional int8 error-feedback gradient
+compression on the data-parallel all-reduce.  The host loop adds
+fault-tolerance: periodic async checkpoints, preemption-signal checkpoint,
+and a straggler watchdog.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"      # "bfloat16" halves optimizer HBM
+    microbatches: int = 1              # gradient accumulation
+    remat: bool = True
+    grad_compression: bool = False     # int8 error-feedback DP all-reduce
+
+    def make_optimizer(self):
+        mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[self.moment_dtype]
+        return opt_lib.make_optimizer(
+            self.optimizer, peak_lr=self.peak_lr,
+            total_steps=self.total_steps, warmup_steps=self.warmup_steps,
+            moment_dtype=mdt, weight_decay=self.weight_decay)
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int
+                        ) -> Dict[str, jax.Array]:
+    """Reshape leading batch dim B -> (n, B//n)."""
+    def rs(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return jax.tree_util.tree_map(rs, batch)
+
+
+def make_train_step(model, tcfg: TrainConfig,
+                    compress_fn: Optional[Callable] = None):
+    """Returns (train_step, optimizer).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+    """
+    opt = tcfg.make_optimizer()
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=tcfg.remat)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        metrics = dict(metrics, loss=loss)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            mb = _split_microbatches(batch, tcfg.microbatches)
+
+            def body(carry, mb_i):
+                acc, _ = carry
+                g, m = grads_of(params, mb_i)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), acc, g)
+                return (acc, m), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "xent": jnp.zeros((), jnp.float32),
+                  "z_loss": jnp.zeros((), jnp.float32),
+                  "aux": jnp.zeros((), jnp.float32),
+                  "tokens": jnp.zeros((), jnp.float32)}
+            (gsum, metrics), _ = jax.lax.scan(body, (zeros, m0), mb)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / tcfg.microbatches, gsum)
+        else:
+            grads, metrics = grads_of(params, batch)
+
+        if compress_fn is not None:
+            grads = compress_fn(grads)
+
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+# ---------------------------------------------------------------------------
+# host-side loop with fault-tolerance hooks
+# ---------------------------------------------------------------------------
+
+class StragglerWatchdog:
+    """Flags steps exceeding ``factor`` x the rolling median step time.
+
+    On a real cluster the flag feeds the job controller (restart the slow
+    host / exclude it on the next elastic resize); here it records events
+    so tests and the example driver can observe mitigation decisions.
+    """
+
+    def __init__(self, factor: float = 3.0, history: int = 32):
+        self.factor = factor
+        self.history = history
+        self.times: list = []
+        self.events: list = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        slow = False
+        if len(self.times) >= 5:
+            med = sorted(self.times)[len(self.times) // 2]
+            if seconds > self.factor * med:
+                self.events.append((step, seconds, med))
+                slow = True
+        self.times.append(seconds)
+        if len(self.times) > self.history:
+            self.times.pop(0)
+        return slow
+
+
+class PreemptionHandler:
+    """SIGTERM -> request a checkpoint at the next step boundary."""
+
+    def __init__(self):
+        self.requested = threading.Event()
+        try:
+            signal.signal(signal.SIGTERM, self._on_signal)
+        except ValueError:
+            pass   # not the main thread (tests)
+
+    def _on_signal(self, signum, frame):
+        self.requested.set()
+
+
+def train_loop(model, tcfg: TrainConfig, params, opt_state, batches, *,
+               steps: int, checkpointer=None, checkpoint_every: int = 100,
+               watchdog: Optional[StragglerWatchdog] = None,
+               log_every: int = 10, start_step: int = 0,
+               train_step=None) -> Tuple[Any, Any, Dict[str, list]]:
+    """Simple host loop: step, log, checkpoint, watch for stragglers.
+
+    ``batches`` is an iterator of ready (sharded) batches.
+    """
+    if train_step is None:
+        train_step, _ = make_train_step(model, tcfg)
+    train_step = jax.jit(train_step, donate_argnums=(0, 1))
+    preempt = PreemptionHandler()
+    history: Dict[str, list] = {"loss": [], "step_time": []}
+
+    step = start_step
+    for step in range(start_step, steps):
+        batch = next(batches)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        history["loss"].append(float(metrics["loss"]))
+        history["step_time"].append(dt)
+        if watchdog is not None:
+            watchdog.observe(step, dt)
+        if log_every and step % log_every == 0:
+            print(f"step {step:6d} loss {float(metrics['loss']):.4f} "
+                  f"grad_norm {float(metrics['grad_norm']):.3f} "
+                  f"{dt*1e3:.1f} ms")
+        want_ckpt = checkpointer is not None and (
+            (step + 1) % checkpoint_every == 0 or preempt.requested.is_set())
+        if want_ckpt:
+            checkpointer.save(step + 1, params, opt_state)
+            if preempt.requested.is_set():
+                print(f"preemption checkpoint at step {step + 1}; exiting")
+                break
+    return params, opt_state, history

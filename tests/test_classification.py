@@ -1,0 +1,54 @@
+"""Automatic classification (§V future work) recovers the expert labels."""
+import pytest
+
+from repro.core.classification import (Classification, JobProfile,
+                                       StageProfile, auto_class, classify)
+from repro.core.trace import JobClass, PAPER_JOBS
+
+
+def test_auto_classification_matches_expert_labels():
+    """Minimal-profiling classification reproduces Table I for every one
+    of the paper's nine algorithms."""
+    expert = {j.algorithm: j.job_class for j in PAPER_JOBS}
+    for algo, klass in expert.items():
+        assert auto_class(algo) is klass, algo
+
+
+def test_mixed_stage_job_advises_split():
+    """The paper's select-where-order-by case: a B-dominated job with a
+    significant A stage should advise stage splitting (§II-C)."""
+    prof = JobProfile("SelectWhereOrderBy-highhit", stages=(
+        StageProfile("select-where", 1.0, 0.0, weight=0.5),
+        StageProfile("order-by", 2.5, 0.6, random_access=True, weight=0.5),
+    ))
+    c = classify(prof)
+    assert c.advise_split and not c.confident
+
+
+def test_single_pass_large_retention_is_still_b():
+    """Retaining data without re-reading it doesn't pay for memory:
+    one pass -> class B even with a big working set."""
+    prof = JobProfile("one-pass-agg", stages=(
+        StageProfile("agg", 1.0, 0.9),))
+    assert classify(prof).job_class is JobClass.B
+
+
+def test_iterative_small_state_is_b():
+    """Many passes over a tiny working set (streaming stats) -> B."""
+    prof = JobProfile("stream-stats", stages=(
+        StageProfile("iter", 10.0, 0.01),))
+    assert classify(prof).job_class is JobClass.B
+
+
+def test_flora_with_auto_classes_matches_expert_flora():
+    """End-to-end: Flora driven by auto-classification equals Flora driven
+    by expert labels on the regenerated trace."""
+    from repro.core import costmodel, spark_sim
+    from repro.core.flora import Flora
+    trace = spark_sim.generate_trace(seed=0)
+    flora = Flora(trace, costmodel.LinearPriceModel())
+    for job in trace.jobs:
+        expert_pick = flora.select_for_job(job)
+        auto_pick = flora.select_for_job(
+            job, annotated_class=auto_class(job.algorithm))
+        assert expert_pick.index == auto_pick.index, job.name

@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Sweeps shapes/dtypes per the kernel contract and asserts allclose against
+ref.py; includes the model-side chunked jnp attention as a third
+implementation for mutual agreement.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rwkv6_scan import wkv6_pallas
+from repro.models.layers import sdpa
+from repro.models.recurrent import wkv6_scan_ref, wkv6_scan_chunked
+
+
+def _qkv(key, B, Tq, Tk, H, G, D, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, Tq, H, D), dtype)
+    k = jax.random.normal(kk, (B, Tk, G, D), dtype)
+    v = jax.random.normal(kv, (B, Tk, G, D), dtype)
+    return q, k, v
+
+
+ATTN_CASES = [
+    # B, T, H, G, D, causal, window, bq, bkv
+    (2, 128, 4, 4, 32, True, None, 32, 32),
+    (1, 256, 4, 2, 64, True, None, 64, 64),     # GQA
+    (2, 128, 8, 1, 32, True, None, 64, 32),     # MQA
+    (1, 128, 2, 2, 32, False, None, 32, 64),    # bidirectional
+    (1, 256, 4, 4, 32, True, 64, 64, 32),       # local window
+    (1, 64, 2, 2, 128, True, None, 64, 64),     # full head dim
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, T, H, G, D, causal, window, bq, bkv = case
+    q, k, v = _qkv(jax.random.PRNGKey(hash(case) % 2**31), B, T, T, H, G, D,
+                   dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=bq, block_kv=bkv, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=atol, rtol=1e-2)
+
+
+@pytest.mark.parametrize("case", ATTN_CASES[:4])
+def test_model_sdpa_matches_ref(case):
+    """The model's chunked online-softmax jnp path equals the oracle."""
+    B, T, H, G, D, causal, window, bq, bkv = case
+    q, k, v = _qkv(jax.random.PRNGKey(7), B, T, T, H, G, D, jnp.float32)
+    out = sdpa(q, k, v, causal=causal, window=window, q_chunk=32,
+               kv_chunk=32)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=3e-5, rtol=1e-3)
+
+
+WKV_CASES = [
+    # B, T, H, N, chunk
+    (2, 64, 2, 16, 16),
+    (1, 128, 4, 32, 64),
+    (2, 32, 1, 64, 32),
+    (1, 96, 3, 16, 32),
+]
+
+
+def _wkv_inputs(key, B, T, H, N, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, T, H, N), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, N), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, N), dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, N))) * 0.5 + 0.45
+    u = (jax.random.normal(ks[4], (H, N)) * 0.5).astype(dtype)
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    return r, k, v, w.astype(dtype), u, s0
+
+
+@pytest.mark.parametrize("case", WKV_CASES)
+def test_wkv6_pallas_matches_ref(case):
+    B, T, H, N, chunk = case
+    inputs = _wkv_inputs(jax.random.PRNGKey(sum(case)), B, T, H, N)
+    y, sT = wkv6_pallas(*inputs, chunk=chunk, interpret=True)
+    y_ref, sT_ref = wkv6_scan_ref(*inputs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_ref),
+                               atol=1e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("case", WKV_CASES[:2])
+def test_wkv6_chunked_matches_ref(case):
+    """The model-side chunk-remat scan equals the exact recurrence."""
+    B, T, H, N, chunk = case
+    inputs = _wkv_inputs(jax.random.PRNGKey(3), B, T, H, N)
+    y_c, sT_c = wkv6_scan_chunked(*inputs, chunk=chunk)
+    y_ref, sT_ref = wkv6_scan_ref(*inputs)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sT_c), np.asarray(sT_ref),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_wkv6_state_carry():
+    """Splitting a sequence across two kernel calls carries state exactly."""
+    B, T, H, N = 1, 64, 2, 16
+    r, k, v, w, u, s0 = _wkv_inputs(jax.random.PRNGKey(11), B, T, H, N)
+    y_full, sT_full = wkv6_scan_ref(r, k, v, w, u, s0)
+    half = T // 2
+    y1, s_mid = wkv6_pallas(r[:, :half], k[:, :half], v[:, :half],
+                            w[:, :half], u, s0, chunk=16, interpret=True)
+    y2, sT = wkv6_pallas(r[:, half:], k[:, half:], v[:, half:],
+                         w[:, half:], u, s_mid, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_full),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_flash_attention_gqa_grouping_property():
+    """Repeating kv heads R times and running MHA equals GQA directly."""
+    B, T, H, G, D = 1, 64, 4, 2, 32
+    q, k, v = _qkv(jax.random.PRNGKey(5), B, T, T, H, G, D, jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=32,
+                                 block_kv=32, interpret=True)
+    k_rep = jnp.repeat(k, H // G, axis=2)
+    v_rep = jnp.repeat(v, H // G, axis=2)
+    out_mha = flash_attention_pallas(q, k_rep, v_rep, causal=True,
+                                     block_q=32, block_kv=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_mha),
+                               atol=1e-5, rtol=1e-4)

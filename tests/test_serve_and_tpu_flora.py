@@ -1,0 +1,133 @@
+"""Serving engine + TPU-side Flora selection tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.costmodel import TpuPriceModel
+from repro.core.tpu_flora import (MeshOption, TpuFlora, WorkloadRecord,
+                                  classify_workload, SHAPE_CLASSES)
+from repro.core.trace import JobClass
+from repro.models import build_model
+from repro.serve.engine import Engine, Request
+
+
+def _engine(name="qwen3-1.7b", slots=2, max_len=32):
+    cfg = C.reduced(C.get(name))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return Engine(model, params, slots=slots, max_len=max_len), cfg
+
+
+def test_engine_greedy_matches_manual_decode():
+    eng, cfg = _engine()
+    prompt = jnp.arange(8, dtype=jnp.int32) % cfg.vocab_size
+    [comp] = eng.generate_batch([Request(uid=1, prompt=prompt,
+                                         max_new_tokens=5)])
+    assert len(comp.tokens) == 5
+    # manual greedy rollout
+    model, params = eng.model, eng.params
+    state = model.init_state(eng.slots, eng.max_len)
+    batch = {"tokens": jnp.stack([prompt, prompt])}
+    logits, state = model.prefill(params, batch, state)
+    toks = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for step in range(5):
+        toks.append(int(tok[0]))
+        logits, state = model.decode_step(params, tok,
+                                          jnp.int32(8 + step), state)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert comp.tokens == toks
+
+
+def test_engine_waves_cover_all_requests():
+    eng, cfg = _engine(slots=2)
+    reqs = [Request(uid=i, prompt=jnp.arange(4, dtype=jnp.int32),
+                    max_new_tokens=2) for i in range(5)]
+    comps = eng.serve(reqs)
+    assert sorted(c.uid for c in comps) == [0, 1, 2, 3, 4]
+    assert all(len(c.tokens) == 2 for c in comps)
+
+
+def test_engine_eos_stops_early():
+    eng, cfg = _engine()
+    prompt = jnp.arange(4, dtype=jnp.int32)
+    state = eng.model.init_state(eng.slots, eng.max_len)
+    logits, _ = eng.model.prefill(
+        eng.params, {"tokens": jnp.stack([prompt, prompt])}, state)
+    first = int(jnp.argmax(logits, -1)[0])
+    [comp] = eng.generate_batch([Request(uid=1, prompt=prompt,
+                                         max_new_tokens=8, eos_id=first)])
+    assert comp.tokens == [first]
+
+
+# --- TPU Flora ---------------------------------------------------------------------
+
+def _mesh_options():
+    return [
+        MeshOption("dp256xtp1", "v5e", 256, (256, 1), ("data", "model")),
+        MeshOption("dp32xtp8", "v5e", 256, (32, 8), ("data", "model")),
+        MeshOption("dp16xtp16", "v5e", 256, (16, 16), ("data", "model")),
+        MeshOption("v5p-dp16xtp16", "v5p", 256, (16, 16), ("data", "model")),
+    ]
+
+
+def _records():
+    """Synthetic profiled trace: decode jobs (class A) run best on high-TP
+    splits; train jobs (class B) on high-DP splits; v5p is faster but 3.5x
+    the price."""
+    recs = []
+    speed = {"dp256xtp1": {"train": 1.0, "decode": 4.0},
+             "dp32xtp8": {"train": 1.2, "decode": 1.5},
+             "dp16xtp16": {"train": 1.5, "decode": 1.0},
+             "v5p-dp16xtp16": {"train": 0.8, "decode": 0.55}}
+    for arch in ("a1", "a2", "a3"):
+        for shape, kind in (("train_4k", "train"), ("decode_32k", "decode")):
+            for mesh, s in speed.items():
+                recs.append(WorkloadRecord(arch=arch, shape=shape,
+                                           mesh=mesh,
+                                           step_seconds=s[kind]))
+    return recs
+
+
+def test_classification_defaults_and_annotation():
+    assert classify_workload("train_4k") is JobClass.B
+    assert classify_workload("decode_32k") is JobClass.A
+    assert classify_workload("train_4k", JobClass.A) is JobClass.A
+
+
+def test_tpu_flora_selects_per_class():
+    flora = TpuFlora(_mesh_options(), _records(), TpuPriceModel("ondemand"))
+    train_pick = flora.select("train_4k")
+    decode_pick = flora.select("decode_32k")
+    assert train_pick.name == "dp256xtp1"     # cheapest for class B jobs
+    assert decode_pick.name == "dp16xtp16"    # v5e high-TP wins on $ for A
+
+
+def test_tpu_flora_reacts_to_price_change():
+    """Flora's defining property: the selection tracks current prices.
+    If v5p drops to v5e prices, its speed advantage wins."""
+    cheap_v5p = TpuPriceModel(rates={"v5p": 1.2, "v5e": 1.2})
+    flora = TpuFlora(_mesh_options(), _records(), cheap_v5p)
+    assert flora.select("decode_32k").generation == "v5p"
+
+
+def test_tpu_flora_leave_arch_out():
+    recs = _records()
+    flora = TpuFlora(_mesh_options(), recs, TpuPriceModel())
+    pick = flora.select("decode_32k", exclude_archs=("a1",))
+    assert pick.name == "dp16xtp16"
+
+
+def test_tpu_flora_one_class_blends():
+    flora1 = TpuFlora(_mesh_options(), _records(), TpuPriceModel(),
+                      one_class=True)
+    ranked = flora1.rank(JobClass.B)   # class ignored
+    # the blended optimum sits between the per-class extremes
+    assert ranked[0].config_id in ("dp32xtp8", "dp16xtp16", "dp256xtp1")
+    two = TpuFlora(_mesh_options(), _records(), TpuPriceModel())
+    per_class_cost = (two.rank(JobClass.B)[0].mean_norm_cost
+                      + two.rank(JobClass.A)[0].mean_norm_cost)
+    blended_cost = (flora1.rank(JobClass.B)[0].mean_norm_cost * 2)
+    assert per_class_cost <= blended_cost + 1e-9

@@ -1,0 +1,107 @@
+"""Sharding rule resolution tests (mesh built from 16 CPU devices is not
+needed — spec_for only reads mesh.shape, so we use a fake)."""
+import types
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as C
+from repro.sharding import rules as R
+
+
+class FakeMesh:
+    """Only `.shape` (a dict) is consulted by spec_for."""
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH_MP = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_basic_tp_fsdp_resolution():
+    rules = R.production_rules()
+    # attention q projection: embed->data (FSDP), heads->model
+    spec = R.spec_for((4096, 32, 128), ("embed", "heads", "head_dim"),
+                      rules, MESH)
+    assert spec == P("data", "model")
+    # mlp weight
+    assert R.spec_for((4096, 11008), ("embed", "mlp"), rules, MESH) == \
+        P("data", "model")
+    # moe experts 2D-sharded
+    assert R.spec_for((128, 4096, 768), ("experts", "embed", "mlp"),
+                      rules, MESH) == P("model", "data")
+
+
+def test_divisibility_fallback_replicates():
+    rules = R.production_rules()
+    # llama4: 40 heads on 16-way model -> heads replicated, head_dim takes it
+    spec = R.spec_for((5120, 40, 128), ("embed", "heads", "head_dim"),
+                      rules, MESH)
+    assert spec == P("data", None, "model")
+    # 8 kv heads -> falls through to head_dim
+    spec = R.spec_for((5120, 8, 128), ("embed", "kv_heads", "head_dim"),
+                      rules, MESH)
+    assert spec == P("data", None, "model")
+
+
+def test_mesh_axis_used_once():
+    rules = R.production_rules()
+    # heads takes model; head_dim must NOT reuse it
+    spec = R.spec_for((4096, 32, 128), (None, "heads", "head_dim"),
+                      rules, MESH)
+    assert spec == P(None, "model")
+
+
+def test_multi_pod_batch_spans_pod_and_data():
+    rules = R.production_rules(multi_pod=True)
+    spec = R.spec_for((256, 4096), ("batch", "seq"), rules, MESH_MP)
+    assert spec == P(("pod", "data"))
+    # batch=1 (long_500k) falls back to replication
+    spec = R.spec_for((1, 4096), ("batch", "seq"), rules, MESH_MP)
+    assert spec == P()
+
+
+def test_arch_overrides_consistency():
+    # deepseek: H=G=32 -> heads sharded, head_dim off
+    cfg = C.get("deepseek-7b")
+    assert R.arch_overrides(cfg, 16) == {"head_dim": None}
+    # qwen3: H=16 ok, G=8 not -> replicate kv for train; head_dim for decode
+    cfg = C.get("qwen3-1.7b")
+    assert R.arch_overrides(cfg, 16, "train") == {"head_dim": None}
+    assert R.arch_overrides(cfg, 16, "decode") == \
+        {"heads": None, "kv_heads": None}
+    # llama4: 40 heads -> fully replicated attention on tp=16...
+    cfg = C.get("llama4-maverick-400b-a17b")
+    assert R.arch_overrides(cfg, 16, "train") == \
+        {"heads": None, "kv_heads": None, "head_dim": None}
+    # ...but clean head sharding on tp=8 (the Flora mesh-selection story)
+    assert R.arch_overrides(cfg, 8, "train") == {"head_dim": None}
+
+
+def test_every_arch_has_some_model_sharding():
+    """On the production mesh no arch may end up fully replicated: at
+    minimum the FFN/vocab dims must shard over the model axis."""
+    rules = R.production_rules()
+    from repro.models import build_model
+    from repro.models.types import ParamSpec
+    import jax
+    for name in C.ARCH_NAMES:
+        cfg = C.get(name)
+        rules_a = rules.with_overrides(**R.arch_overrides(cfg, 16))
+        specs = build_model(cfg).param_specs()
+        leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        sharded = sum(
+            1 for s in leaves
+            if any(e is not None
+                   for e in R.spec_for(s.shape, s.axes, rules_a, MESH)))
+        assert sharded / len(leaves) > 0.3, name
+
+
+def test_bytes_per_device_accounting():
+    rules = R.production_rules()
+    from repro.models.types import ParamSpec
+    tree = {"w": ParamSpec((1024, 1024), ("embed", "mlp"))}   # f32
+    per_dev = R.bytes_per_device(tree, rules, MESH)
+    assert per_dev == 1024 * 1024 * 4 // 256

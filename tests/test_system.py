@@ -1,0 +1,131 @@
+"""End-to-end system behaviour tests."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.data import pipeline as data_lib
+from repro.models import build_model
+from repro.models.types import ShapeSpec
+from repro.train.checkpoint import Checkpointer
+from repro.train.train_loop import TrainConfig, make_train_step
+
+
+def test_train_checkpoint_restart_continues_identically(tmp_path):
+    """Crash/restart produces bit-identical training to an uninterrupted
+    run: same data (seekable stream), same params (checkpoint restore)."""
+    cfg = C.reduced(C.get("deepseek-7b"))
+    model = build_model(cfg)
+    shape = ShapeSpec("sys", 32, 4, "train")
+    stream = data_lib.for_model(cfg, shape, seed=7)
+    tcfg = TrainConfig(peak_lr=1e-3, warmup_steps=2, total_steps=20)
+    step_fn, opt = make_train_step(model, tcfg)
+    step_fn = jax.jit(step_fn)
+
+    def put(b):
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    # uninterrupted run: 6 steps
+    p = model.init(jax.random.PRNGKey(0))
+    s = opt.init(p)
+    for i in range(6):
+        p, s, _ = step_fn(p, s, put(stream.batch_at(i)))
+    ref_leaves = jax.tree_util.tree_leaves(p)
+
+    # interrupted run: 3 steps, checkpoint, "crash", restore, 3 more
+    ck = Checkpointer(str(tmp_path))
+    p2 = model.init(jax.random.PRNGKey(0))
+    s2 = opt.init(p2)
+    for i in range(3):
+        p2, s2, _ = step_fn(p2, s2, put(stream.batch_at(i)))
+    ck.save(3, p2, s2, block=True)
+    del p2, s2
+    tree, start = ck.restore({"params": model.init(jax.random.PRNGKey(0)),
+                              "opt_state": opt.init(
+                                  model.init(jax.random.PRNGKey(0)))})
+    p3, s3 = tree["params"], tree["opt_state"]
+    for i in range(start, 6):
+        p3, s3, _ = step_fn(p3, s3, put(stream.batch_at(i)))
+    for a, b in zip(ref_leaves, jax.tree_util.tree_leaves(p3)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_data_pipeline_determinism_and_host_sharding():
+    cfg = C.reduced(C.get("qwen3-1.7b"))
+    shape = ShapeSpec("sys", 16, 8, "train")
+    a = data_lib.for_model(cfg, shape, seed=3).batch_at(5)
+    b = data_lib.for_model(cfg, shape, seed=3).batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # two hosts draw disjoint slices of the same global batch space
+    h0 = data_lib.for_model(cfg, shape, seed=3, host_count=2, host_index=0)
+    h1 = data_lib.for_model(cfg, shape, seed=3, host_count=2, host_index=1)
+    b0, b1 = h0.batch_at(0), h1.batch_at(0)
+    assert b0["tokens"].shape[0] == 4
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_prefetch_iterator_yields_in_order():
+    cfg = C.reduced(C.get("qwen3-1.7b"))
+    shape = ShapeSpec("sys", 16, 4, "train")
+    stream = data_lib.for_model(cfg, shape, seed=1)
+    it = data_lib.PrefetchIterator(stream, start_step=2)
+    got = next(it)
+    expect = stream.batch_at(2)
+    np.testing.assert_array_equal(np.asarray(got["tokens"]),
+                                  expect["tokens"])
+    it.close()
+
+
+def test_dryrun_report_flows_into_flora_selection(tmp_path):
+    """The launch pipeline contract: dryrun JSON -> records -> selection."""
+    from repro.core.costmodel import TpuPriceModel
+    from repro.core.tpu_flora import (MeshOption, TpuFlora,
+                                      records_from_dryrun_report)
+    report = {"cells": [
+        {"arch": "a", "shape": "train_4k", "mesh": "16x16", "ok": True,
+         "roofline": {"compute_s": 0.2, "memory_s": 0.1,
+                      "collective_s": 0.05}},
+        {"arch": "a", "shape": "train_4k", "mesh": "32x8", "ok": True,
+         "roofline": {"compute_s": 0.15, "memory_s": 0.1,
+                      "collective_s": 0.02}},
+        {"arch": "a", "shape": "decode_32k", "mesh": "16x16", "ok": False,
+         "error": "x"},
+    ]}
+    recs = records_from_dryrun_report(report)
+    assert len(recs) == 2           # failed cells are excluded
+    assert recs[0].step_seconds == pytest.approx(0.2)
+    options = [MeshOption("16x16", "v5e", 256, (16, 16), ("d", "m")),
+               MeshOption("32x8", "v5e", 256, (32, 8), ("d", "m"))]
+    flora = TpuFlora(options, recs, TpuPriceModel())
+    assert flora.select("train_4k").name == "32x8"   # faster, same price
+
+
+def test_fused_vocab_chunk_loss_matches_plain():
+    """The fused head+cross-entropy (vocab_chunk) equals the plain loss
+    and produces matching gradients (the beyond-paper memory optimization
+    of EXPERIMENTS.md §Perf)."""
+    from repro.models import settings as settings_lib
+    cfg = C.reduced(C.get("qwen3-1.7b"), vocab=517)   # ragged chunking
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.configs import shapes as S
+    batch = S.make_batch(cfg, ShapeSpec("s", 16, 2, "train"),
+                         jax.random.PRNGKey(1))
+    batch["labels"] = batch["labels"].at[:, :3].set(-1)   # masked prefix
+    loss_fn = lambda p: model.loss(p, batch)[0]
+    base, base_g = jax.value_and_grad(loss_fn)(params)
+    with settings_lib.use(vocab_chunk=128):
+        fused, fused_g = jax.value_and_grad(loss_fn)(params)
+    np.testing.assert_allclose(float(base), float(fused), rtol=2e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(base_g),
+                    jax.tree_util.tree_leaves(fused_g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-2)

@@ -1,0 +1,240 @@
+"""Optimizer / checkpoint / compression / fault-tolerance substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as C
+from repro.configs import shapes as S
+from repro.models import build_model
+from repro.models.types import ShapeSpec
+from repro.train import optimizer as opt_lib
+from repro.train.checkpoint import Checkpointer
+from repro.train.compression import ErrorFeedback, quantise_int8, dequantise
+from repro.train.train_loop import (StragglerWatchdog, TrainConfig,
+                                    make_train_step)
+
+SMOKE = ShapeSpec("smoke", 32, 2, "train")
+
+
+# --- optimizer -----------------------------------------------------------------
+
+def _numpy_adamw(p, g, m, v, t, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    p = p - lr * (mh / (np.sqrt(vh) + eps) + wd * p)
+    return p, m, v
+
+
+def test_adamw_matches_numpy_reference():
+    sched = lambda step: jnp.float32(1e-2)
+    opt = opt_lib.AdamW(schedule=sched, max_grad_norm=1e9)
+    params = {"w": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array([[0.5, 0.1]])}
+    state = opt.init(params)
+    np_p = {k: np.asarray(v) for k, v in params.items()}
+    np_m = {k: np.zeros_like(v) for k, v in np_p.items()}
+    np_v = {k: np.zeros_like(v) for k, v in np_p.items()}
+    key = jax.random.PRNGKey(0)
+    for t in range(1, 5):
+        key, sub = jax.random.split(key)
+        grads = {k: jax.random.normal(jax.random.fold_in(sub, i), v.shape)
+                 for i, (k, v) in enumerate(params.items())}
+        params, state, _ = opt.update(grads, state, params)
+        for k in np_p:
+            np_p[k], np_m[k], np_v[k] = _numpy_adamw(
+                np_p[k], np.asarray(grads[k]), np_m[k], np_v[k], t, 1e-2)
+    for k in np_p:
+        np.testing.assert_allclose(np.asarray(params[k]), np_p[k],
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=8),
+       st.floats(0.1, 10.0))
+def test_clip_by_global_norm_property(vals, max_norm):
+    tree = {"x": jnp.array(vals, jnp.float32)}
+    clipped, norm = opt_lib.clip_by_global_norm(tree, max_norm)
+    out_norm = float(opt_lib.global_norm(clipped))
+    assert out_norm <= max_norm * 1.001 + 1e-6
+    if float(norm) <= max_norm:   # no-op when under the threshold
+        np.testing.assert_allclose(np.asarray(clipped["x"]),
+                                   np.asarray(tree["x"]), rtol=1e-6)
+
+
+def test_warmup_cosine_schedule():
+    s = opt_lib.WarmupCosine(peak_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(s(jnp.int32(0))) == 0.0
+    assert float(s(jnp.int32(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(s(jnp.int32(100))) == pytest.approx(0.1, abs=1e-3)
+    assert float(s(jnp.int32(55))) < 1.0
+
+
+def test_adafactor_reduces_loss():
+    cfg = C.reduced(C.get("deepseek-7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = S.make_batch(cfg, SMOKE, jax.random.PRNGKey(1))
+    tcfg = TrainConfig(optimizer="adafactor", peak_lr=1e-2, warmup_steps=1,
+                      total_steps=100)
+    step, opt = make_train_step(model, tcfg)
+    step = jax.jit(step)
+    opt_state = opt.init(params)
+    losses = []
+    for _ in range(4):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_adafactor_state_is_factored():
+    opt = opt_lib.make_optimizer("adafactor")
+    params = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((16,))}
+    state = opt.init(params)
+    sizes = sum(int(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(state["f"]))
+    assert sizes == 8 + 16 + 16        # vr + vc for w, v for b
+
+
+# --- microbatch accumulation -------------------------------------------------------
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = C.reduced(C.get("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = S.make_batch(cfg, ShapeSpec("s", 16, 4, "train"),
+                         jax.random.PRNGKey(1))
+    t1 = TrainConfig(microbatches=1, peak_lr=1e-3)
+    t2 = TrainConfig(microbatches=2, peak_lr=1e-3)
+    s1, o1 = make_train_step(model, t1)
+    s2, o2 = make_train_step(model, t2)
+    p1, _, m1 = jax.jit(s1)(params, o1.init(params), batch)
+    p2, _, m2 = jax.jit(s2)(params, o2.init(params), batch)
+    # parameters after one step agree (loss is mean-per-token so microbatch
+    # averaging matches; allow small numerical slack)
+    flat1 = jax.tree_util.tree_leaves(p1)
+    flat2 = jax.tree_util.tree_leaves(p2)
+    for a, b in zip(flat1, flat2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=5e-3)
+
+
+# --- checkpointing ------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    params = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+              "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    opt_state = {"m": jax.tree_util.tree_map(jnp.zeros_like, params),
+                 "count": jnp.int32(7)}
+    ck.save(3, params, opt_state, block=True)
+    tree, step = ck.restore({"params": params, "opt_state": opt_state})
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(tree["params"]["a"]),
+                                  np.asarray(params["a"]))
+    assert int(tree["opt_state"]["count"]) == 7
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    params = {"w": jnp.zeros((2,))}
+    for step in (1, 2, 3, 4):
+        ck.save(step, params, block=True)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000003", "step_00000004"]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    params = {"w": jnp.ones((128, 128))}
+    ck.save(1, params, block=True)
+    leftovers = [d for d in os.listdir(tmp_path) if ".tmp" in d]
+    assert not leftovers
+
+
+def test_checkpoint_elastic_restore_roundtrip(tmp_path):
+    """Restore works regardless of the mesh that saved (arrays are stored
+    unsharded) — the elastic-restart path."""
+    ck = Checkpointer(str(tmp_path))
+    cfg = C.reduced(C.get("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ck.save(10, params, block=True)
+    restored, step = ck.restore({"params": params})
+    for a, b in zip(jax.tree_util.tree_leaves(restored["params"]),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- gradient compression ---------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=32))
+def test_int8_quantisation_error_bound(vals):
+    x = jnp.array(vals, jnp.float32)
+    q, scale = quantise_int8(x)
+    err = np.abs(np.asarray(dequantise(q, scale) - x))
+    assert err.max() <= float(scale) * 0.5 + 1e-9
+
+
+def test_error_feedback_preserves_gradient_sum():
+    """Residual carries what quantisation dropped: across steps the sum of
+    applied (dequantised) gradients tracks the sum of true gradients."""
+    ef = ErrorFeedback()
+    key = jax.random.PRNGKey(0)
+    grads_template = {"w": jnp.zeros((64,))}
+    residual = ef.init(grads_template)
+    applied_sum = np.zeros((64,))
+    true_sum = np.zeros((64,))
+    for i in range(20):
+        key, sub = jax.random.split(key)
+        g = {"w": jax.random.normal(sub, (64,)) * (10.0 ** (i % 3))}
+        deq, residual = ef.compress(g, residual)
+        applied_sum += np.asarray(deq["w"], np.float32)
+        true_sum += np.asarray(g["w"], np.float32)
+    # |sum error| is bounded by the final residual, not growing with steps
+    final_res = np.abs(np.asarray(residual["w"]))
+    np.testing.assert_allclose(applied_sum, true_sum, atol=final_res.max()
+                               + 1e-4)
+
+
+def test_compressed_training_still_converges():
+    cfg = C.reduced(C.get("deepseek-7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = S.make_batch(cfg, SMOKE, jax.random.PRNGKey(1))
+    ef = ErrorFeedback()
+    residual = [None]
+
+    def compress(grads):
+        if residual[0] is None:
+            residual[0] = ef.init(grads)
+        deq, residual[0] = ef.compress(grads, residual[0])
+        return deq
+
+    tcfg = TrainConfig(peak_lr=5e-3, warmup_steps=1)
+    step, opt = make_train_step(model, tcfg, compress_fn=compress)
+    opt_state = opt.init(params)
+    losses = []
+    for _ in range(5):
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+# --- straggler watchdog ----------------------------------------------------------
+
+def test_straggler_watchdog_flags_outliers():
+    wd = StragglerWatchdog(factor=3.0)
+    for i in range(10):
+        assert not wd.observe(i, 0.1)
+    assert wd.observe(10, 1.0)        # 10x median -> straggler event
+    assert wd.events and wd.events[0][0] == 10
+    assert not wd.observe(11, 0.11)
