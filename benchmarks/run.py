@@ -94,25 +94,33 @@ def bench_selection_overhead(trace, price):
 def bench_tpu_selection():
     """DESIGN.md §3: mesh selection over the dry-run-profiled trace."""
     from repro.core.costmodel import TpuPriceModel
-    from repro.core.tpu_flora import (MeshOption, TpuFlora,
-                                      records_from_dryrun_report)
+    from repro.core.tpu_flora import service_from_dryrun_report
     path = os.environ.get("DRYRUN_REPORT", "dryrun_single.json")
     if not os.path.exists(path):
         print("tpu_selection,0.0,skipped=no_dryrun_report")
         return
     with open(path) as f:
         report = json.load(f)
-    recs = records_from_dryrun_report(report)
-    meshes = sorted({r.mesh for r in recs})
-    options = [MeshOption(m, "v5e", 256, (16, 16), ("data", "model"))
-               for m in meshes]
-    if not recs or len(options) < 1:
+    service = service_from_dryrun_report(report, TpuPriceModel())
+    if not len(service.store) or not len(service.catalog):
         print("tpu_selection,0.0,skipped=empty_report")
         return
-    flora = TpuFlora(options, recs, TpuPriceModel())
-    pick, us = _timed(lambda: flora.select("decode_32k"))
-    print(f"tpu_selection,{us:.1f},decode_pick={pick.name};"
-          f"records={len(recs)}")
+    pick, us = _timed(lambda: service.submit("decode_32k"))
+    print(f"tpu_selection,{us:.1f},decode_pick={pick.config_id};"
+          f"records={len(service.store)};cached={pick.from_cache}")
+
+
+def bench_rank_vectorized_vs_dict():
+    """Tentpole acceptance: vectorized rank beats the per-pair dict loop
+    from ~1k (job x config) cells (see benchmarks/rank_bench.py for the
+    full sweep)."""
+    import rank_bench
+    for n_jobs, n_cfgs in ((50, 20), (200, 50)):
+        r = rank_bench.compare(n_jobs, n_cfgs, repeat=10)
+        print(f"rank_vectorized_{n_jobs}x{n_cfgs},{r['us_numpy']:.1f},"
+              f"cells={r['cells']};dict_loop_us={r['us_dict']:.1f};"
+              f"speedup={r['speedup']:.1f}x;"
+              f"vectorized_wins={r['us_numpy'] < r['us_dict']}")
 
 
 def main() -> None:
@@ -127,6 +135,7 @@ def main() -> None:
     bench_fig3_misclassification(trace, price)
     bench_selection_overhead(trace, price)
     bench_tpu_selection()
+    bench_rank_vectorized_vs_dict()
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

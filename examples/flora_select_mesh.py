@@ -3,14 +3,17 @@ profiling trace, under current chip prices (the DESIGN.md §3 adaptation).
 
     PYTHONPATH=src python examples/flora_select_mesh.py \
         --report dryrun_single.json --shape decode_32k --market spot
+
+Selection goes through the unified :class:`repro.selector.SelectionService`
+— the same stack as the GCP-side quickstart, over a
+:class:`repro.selector.TpuSliceCatalog`.
 """
 import argparse
 import json
 import os
 
 from repro.core.costmodel import TpuPriceModel
-from repro.core.tpu_flora import (MeshOption, TpuFlora,
-                                  records_from_dryrun_report, SHAPE_CLASSES)
+from repro.core.tpu_flora import SHAPE_CLASSES, service_from_dryrun_report
 
 
 def main() -> None:
@@ -29,26 +32,23 @@ def main() -> None:
         raise SystemExit(f"run launch/dryrun.py first to produce "
                          f"{args.report}")
     with open(args.report) as f:
-        recs = records_from_dryrun_report(json.load(f))
-    meshes = sorted({r.mesh for r in recs})
-    options = [MeshOption(m, "v5e", 256, (16, 16), ("data", "model"))
-               for m in meshes]
+        report = json.load(f)
     price = TpuPriceModel(args.market)
-    flora = TpuFlora(options, recs, price)
+    service = service_from_dryrun_report(report, price)
 
-    klass = SHAPE_CLASSES[args.shape]
     exclude = (args.exclude_arch,) if args.exclude_arch else ()
+    decision = service.submit(args.shape, exclude_groups=exclude)
+    klass = decision.job_class
     print(f"workload {args.shape} -> class {klass.value} "
           f"({'state-resident' if klass.value == 'A' else 'streaming-compute'})")
-    print(f"profiled records: {len(recs)}; mesh options: "
-          f"{[o.name for o in options]}\n")
-    for r in flora.rank(klass, exclude_archs=exclude):
-        o = next(x for x in options if x.name == r.config_id)
-        print(f"  {r.config_id:12s} score={r.score:8.3f} "
+    print(f"profiled cells: {len(service.store)}; mesh options: "
+          f"{service.catalog.ids()}\n")
+    for r in decision.ranking:
+        print(f"  {str(r.config_id):12s} score={r.score:8.3f} "
               f"mean_norm_cost={r.mean_norm_cost:6.3f} "
-              f"({o.hourly_cost(price):7.2f} $/h)")
-    pick = flora.select(args.shape, exclude_archs=exclude)
-    print(f"\nFlora selects: {pick.name}")
+              f"({service.catalog.hourly_cost(r.config_id):7.2f} $/h)")
+    print(f"\nFlora selects: {decision.config_id} "
+          f"at {decision.hourly_cost:.2f} $/h")
 
 
 if __name__ == "__main__":

@@ -4,19 +4,24 @@
 
 Steps 0-2 of the paper: profile (regenerate the 180-execution trace),
 classify a submitted job, rank the ten cloud configurations under current
-prices, and compare against the baselines of Table IV.
+prices, and compare against the baselines of Table IV.  Selection goes
+through the unified :mod:`repro.selector` API — the same
+catalog/store/rank/service stack the TPU-side adaptation uses.
 """
 from repro.core import costmodel, evaluate, spark_sim
-from repro.core.flora import Flora
 from repro.core.trace import JobClass, JobSpec
+from repro.selector import GcpVmCatalog, ProfilingStore, SelectionService
 
 
 def main() -> None:
     # Step 0 — infrastructure profiling (regenerated offline trace)
     trace = spark_sim.generate_trace(seed=0)
     price = costmodel.LinearPriceModel()   # GCP n2, Frankfurt, 2024-12-01
-    print(f"profiled {len(trace.records)} executions over "
-          f"{len(trace.configs)} configurations\n")
+    catalog = GcpVmCatalog(trace.configs, price)
+    store = ProfilingStore.from_trace(trace)
+    service = SelectionService(catalog, store, price)
+    print(f"profiled {len(store)} executions over "
+          f"{len(catalog)} configurations\n")
 
     # Step 1 — the user submits a job and annotates its class
     job = JobSpec("PageRank", "Graph", 150, JobClass.A)   # unseen algorithm
@@ -24,15 +29,20 @@ def main() -> None:
           "(memory-demanding: repeated specific data loading)")
 
     # Step 2 — rank configurations by summed normalized class cost
-    flora = Flora(trace, price)
-    ranked = flora.rank(job.job_class)
+    decision = service.submit(job.name, annotation=job.job_class)
     print("\nranking (lower score = better):")
-    for r in ranked[:4]:
-        cfg = trace.config(r.config_id)
+    for r in decision.ranking[:4]:
+        cfg = catalog.entry(r.config_id)
         print(f"  #{cfg.index:<2d} {cfg.instance_type:15s} x{cfg.scale_out:<3d}"
-              f" score={r.score:7.3f}  ({price(cfg):.2f} $/h)")
-    best = trace.config(ranked[0].config_id)
-    print(f"\nFlora selects #{best.index} ({best.name})")
+              f" score={r.score:7.3f}  ({catalog.hourly_cost(r.config_id):.2f}"
+              " $/h)")
+    best = decision.entry
+    print(f"\nFlora selects #{best.index} ({best.name}) "
+          f"at {decision.hourly_cost:.2f} $/h")
+
+    # repeat submissions of the same class are cache hits (price epoch 0)
+    again = service.submit("PageRank/300GiB", annotation=JobClass.A)
+    print(f"second class-A submission from cache: {again.from_cache}")
 
     # evaluation against the trace (Table IV)
     print("\nTable IV (mean normalized cost, 1.0 = optimal):")

@@ -1,15 +1,23 @@
 """Serve a small model with batched requests through the engine.
 
     PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b --requests 6
+
+With ``--report dryrun_single.json`` the decode fleet's mesh is first
+planned through the selection service (class A, state-resident), and the
+engine records the placement decision.
 """
 import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
+from repro.core.costmodel import TpuPriceModel
+from repro.core.tpu_flora import service_from_dryrun_report
 from repro.models import build_model, count_params
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine, Request, plan_decode_placement
 
 
 def main() -> None:
@@ -19,7 +27,22 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--report", default=None,
+                    help="dry-run report: plan the decode mesh via the "
+                         "selection service before serving")
+    ap.add_argument("--market", default="ondemand",
+                    choices=["ondemand", "spot"])
     args = ap.parse_args()
+
+    placement = None
+    if args.report and os.path.exists(args.report):
+        with open(args.report) as f:
+            service = service_from_dryrun_report(
+                json.load(f), TpuPriceModel(args.market))
+        placement = plan_decode_placement(service)
+        print(f"[serve] placement: mesh {placement.config_id} "
+              f"at {placement.hourly_cost:.2f} $/h "
+              f"(class {placement.job_class.value})")
 
     cfg = configs.reduced(configs.get(args.arch))
     model = build_model(cfg)
@@ -28,7 +51,8 @@ def main() -> None:
           f"{count_params(model.param_specs())/1e6:.1f}M params, "
           f"{args.slots} decode slots")
 
-    eng = Engine(model, params, slots=args.slots, max_len=64)
+    eng = Engine(model, params, slots=args.slots, max_len=64,
+                 placement=placement)
     key = jax.random.PRNGKey(1)
     reqs = []
     for i in range(args.requests):

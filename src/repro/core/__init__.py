@@ -1,6 +1,11 @@
 """Flora core: the paper's contribution (cloud resource selection) plus the
 TPU-side adaptation (mesh/slice selection for JAX workloads).
 
+The substrate-agnostic selection machinery (catalogs, profiling store,
+vectorized ranking, selection service) lives in :mod:`repro.selector`;
+the modules here are the paper-faithful entry points and adapters
+(DESIGN.md §2).
+
 Layers:
   trace       -- profiling-trace schema + the paper's evaluation universe
   costmodel   -- per-resource (GCP) and per-chip (TPU) price models
@@ -13,4 +18,14 @@ Layers:
 from repro.core.trace import (CloudConfig, ExecutionRecord, GCP_CONFIGS,
                               JobClass, JobSpec, PAPER_JOBS, Trace)
 from repro.core.costmodel import LinearPriceModel, TpuPriceModel
-from repro.core.flora import Flora, RankedConfig, rank_generic
+
+#: lazily re-exported so that repro.selector (imported by repro.core.flora)
+#: can itself import repro.core.trace/costmodel without a package cycle.
+_LAZY = {"Flora", "RankedConfig", "rank_generic"}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from repro.core import flora
+        return getattr(flora, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

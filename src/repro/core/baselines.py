@@ -142,7 +142,13 @@ class Crispy(Approach):
 
 @dataclasses.dataclass
 class FloraApproach(Approach):
-    """Flora (or Fw1C with ``one_class=True``) with leave-one-algorithm-out."""
+    """Flora (or Fw1C with ``one_class=True``) with leave-one-algorithm-out.
+
+    Thin adapter: selection routes through the shared
+    :class:`repro.selector.SelectionService` (via :class:`Flora`), so the
+    per-(class, exclusion, price-epoch) ranking caches are shared across
+    the evaluation's 18 leave-one-out submissions.
+    """
 
     trace: Trace
     price: costmodel.LinearPriceModel
@@ -153,6 +159,11 @@ class FloraApproach(Approach):
     def __post_init__(self):
         self.name = "Flora with one class" if self.one_class else "Flora"
         self._flora = Flora(self.trace, self.price, one_class=self.one_class)
+
+    @property
+    def service(self):
+        """The underlying :class:`repro.selector.SelectionService`."""
+        return self._flora.service
 
     def select(self, job: JobSpec) -> CloudConfig:
         klass = job.job_class.flipped() if self.flip_class else job.job_class

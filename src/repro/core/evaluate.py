@@ -16,10 +16,13 @@ import dataclasses
 import math
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core import costmodel
 from repro.core.baselines import (Approach, FloraApproach, RandomSelection,
                                   standard_approaches)
 from repro.core.trace import CloudConfig, JobClass, JobSpec, Trace
+from repro.selector import GcpVmCatalog, ProfilingStore
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,12 +46,24 @@ def _job_cost(trace: Trace, job: JobSpec, config: CloudConfig,
     return costmodel.execution_cost(trace.runtime_s(job, config), config, price)
 
 
-def _norms(trace: Trace, job: JobSpec, price: costmodel.LinearPriceModel
-           ) -> Tuple[float, float]:
-    """(min cost, min runtime) over all configs for this job."""
-    costs = [_job_cost(trace, job, c, price) for c in trace.configs]
-    runtimes = [trace.runtime_s(job, c) for c in trace.configs]
-    return min(costs), min(runtimes)
+def _best_per_job(trace: Trace, price: costmodel.LinearPriceModel
+                  ) -> Mapping[str, Tuple[float, float]]:
+    """job name -> (min cost, min runtime) over all configs, vectorized.
+
+    One (job x config) matrix from :class:`repro.selector.ProfilingStore`
+    replaces the historical per-(job, config) python loops (the paper's
+    trace is dense, so the mask is all-true; partial traces min over
+    profiled cells only).
+    """
+    store = ProfilingStore.from_trace(trace)
+    catalog = GcpVmCatalog(trace.configs, price)
+    hours, mask = store.matrix(config_ids=catalog.ids())
+    cost = np.where(mask, hours * catalog.price_vector()[None, :], np.inf)
+    runtime = np.where(mask, hours * 3600.0, np.inf)
+    best_cost = cost.min(axis=1)
+    best_rt = runtime.min(axis=1)
+    return {j: (float(best_cost[i]), float(best_rt[i]))
+            for i, j in enumerate(store.job_ids)}
 
 
 def evaluate_approach(trace: Trace, price: costmodel.LinearPriceModel,
@@ -56,9 +71,10 @@ def evaluate_approach(trace: Trace, price: costmodel.LinearPriceModel,
                       jobs: Optional[Sequence[JobSpec]] = None
                       ) -> ApproachResult:
     jobs = list(jobs) if jobs is not None else trace.jobs
+    best = _best_per_job(trace, price)
     per_job: List[JobResult] = []
     for job in jobs:
-        best_cost, best_rt = _norms(trace, job, price)
+        best_cost, best_rt = best[job.name]
         if isinstance(approach, RandomSelection):
             # closed-form expectation over a uniform choice
             ncost = sum(_job_cost(trace, job, c, price) / best_cost

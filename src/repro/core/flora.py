@@ -1,4 +1,4 @@
-"""Flora — the paper's selector (§II).
+"""Flora — the paper's selector (§II), as an adapter over repro.selector.
 
 Given (i) an infrastructure-profiling trace, (ii) the submitted job's class
 annotation, and (iii) *current* hourly prices, rank every cluster
@@ -8,24 +8,22 @@ pick the argmin:
     c* = argmin_c  sum_{j in P_K}  cost(j, c) / min_{c'} cost(j, c')
     cost(j, c) = runtime_in_hours(j, c) * current_hourly_cost(c)
 
-The ranking core is written generically over (job, config, runtime-hours)
-triples so the TPU-side adaptation (:mod:`repro.core.tpu_flora`) reuses it
-unchanged.
+The ranking math, profiling storage and caching live in
+:mod:`repro.selector` (catalog / store / rank / service); this module keeps
+the paper-faithful GCP-VM entry point and the historical ``rank_generic``
+signature as a thin shim over the vectorized :func:`repro.selector.rank.rank_pairs`.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, Hashable, List, Mapping, Optional, Sequence, Tuple
+from typing import (Callable, Hashable, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 from repro.core import costmodel
 from repro.core.trace import CloudConfig, JobClass, JobSpec, Trace
+from repro.selector import (GcpVmCatalog, ProfilingStore, RankedConfig,
+                            SelectionService, rank_pairs)
 
-
-@dataclasses.dataclass(frozen=True)
-class RankedConfig:
-    config_id: Hashable
-    score: float          # sum of normalized costs; lower is better
-    mean_norm_cost: float  # score / number of test jobs
+__all__ = ["Flora", "RankedConfig", "rank_generic"]
 
 
 def rank_generic(
@@ -36,33 +34,12 @@ def rank_generic(
 ) -> List[RankedConfig]:
     """Rank configurations by summed normalized cost over ``jobs``.
 
-    ``runtime_hours[(job, config)]`` is the profiled runtime.  Jobs with a
-    missing entry for some config contribute only over the configs they
-    were profiled on (the paper's trace is complete, so this only matters
-    for partial re-profiling, §II-B).
+    .. deprecated:: use :func:`repro.selector.rank.rank_pairs` (sparse) or
+       :func:`repro.selector.rank.rank_dense` (dense matrices) directly.
+       This shim densifies and delegates; configurations with no profiled
+       entries rank last (score ``+inf``), they no longer win at 0.0.
     """
-    if not jobs:
-        raise ValueError("no test jobs to learn from")
-    scores: Dict[Hashable, float] = {c: 0.0 for c in config_ids}
-    counts: Dict[Hashable, int] = {c: 0 for c in config_ids}
-    for j in jobs:
-        costs = {c: runtime_hours[(j, c)] * hourly_cost(c)
-                 for c in config_ids if (j, c) in runtime_hours}
-        if not costs:
-            continue
-        best = min(costs.values())
-        if best <= 0:
-            raise ValueError(f"non-positive cost for job {j!r}")
-        for c, v in costs.items():
-            scores[c] += v / best
-            counts[c] += 1
-    ranked = [RankedConfig(c, scores[c],
-                           scores[c] / counts[c] if counts[c] else float("inf"))
-              for c in config_ids]
-    # deterministic: sort by score then by stable config order
-    order = {c: i for i, c in enumerate(config_ids)}
-    ranked.sort(key=lambda r: (r.score, order[r.config_id]))
-    return ranked
+    return rank_pairs(runtime_hours, jobs, config_ids, hourly_cost)
 
 
 class Flora:
@@ -75,24 +52,16 @@ class Flora:
         self.trace = trace
         self.price = price
         self.one_class = one_class
+        self.service = SelectionService(
+            GcpVmCatalog(trace.configs, price),
+            ProfilingStore.from_trace(trace), price)
 
     # -- Step 2: ranking ------------------------------------------------------
     def rank(self, annotated_class: JobClass,
              exclude_algorithms: Sequence[str] = ()) -> List[RankedConfig]:
         job_class = None if self.one_class else annotated_class
-        test_jobs = self.trace.filter_jobs(
-            job_class=job_class, exclude_algorithms=exclude_algorithms)
-        runtime_hours = {
-            (j.name, c.index): self.trace.runtime_s(j, c) / 3600.0
-            for j in test_jobs for c in self.trace.configs
-            if self.trace.has(j, c)}
-        by_index = {c.index: c for c in self.trace.configs}
-        return rank_generic(
-            runtime_hours,
-            [j.name for j in test_jobs],
-            [c.index for c in self.trace.configs],
-            lambda idx: self.price(by_index[idx]),
-        )
+        return list(self.service.rank(job_class=job_class,
+                                      exclude_groups=tuple(exclude_algorithms)))
 
     def select(self, annotated_class: JobClass,
                exclude_algorithms: Sequence[str] = ()) -> CloudConfig:

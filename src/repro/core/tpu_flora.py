@@ -15,18 +15,22 @@ The paper's pipeline maps 1:1 onto TPU cluster selection (DESIGN.md §3):
   class B (**memory-yielding / streaming-compute**): training and prefill,
   which stream activations through the MXU.
 
-Selection reuses :func:`repro.core.flora.rank_generic` verbatim — the
-paper's normalized-cost ranking is class- and substrate-agnostic.
+Selection routes through :mod:`repro.selector` — the same
+catalog/store/rank/service stack as the GCP side (the paper's
+normalized-cost ranking is class- and substrate-agnostic), via a
+:class:`repro.selector.TpuSliceCatalog` over the mesh options.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, Hashable, List, Mapping, Optional, Sequence, Tuple
+import re
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.costmodel import TpuPriceModel
-from repro.core.flora import RankedConfig, rank_generic
 from repro.core.trace import JobClass
+from repro.selector import (ProfilingStore, RankedConfig, SelectionService,
+                            TpuSliceCatalog)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,8 +84,19 @@ class WorkloadRecord:
         return SHAPE_CLASSES[self.shape]
 
 
+def make_service(options: Sequence[MeshOption],
+                 records: Sequence[WorkloadRecord],
+                 price: TpuPriceModel) -> SelectionService:
+    """Wire catalog + store + price into a TPU-side selection service."""
+    return SelectionService(
+        TpuSliceCatalog(options, price),
+        ProfilingStore.from_workload_records(
+            records, config_ids=[o.name for o in options]),
+        price, classifier=lambda shape: classify_workload(str(shape)))
+
+
 class TpuFlora:
-    """Flora Steps 0-2 over TPU mesh options."""
+    """Flora Steps 0-2 over TPU mesh options (adapter over the service)."""
 
     def __init__(self, options: Sequence[MeshOption],
                  records: Sequence[WorkloadRecord],
@@ -91,22 +106,13 @@ class TpuFlora:
         self.price = price
         self.one_class = one_class
         self._by_name = {o.name: o for o in self.options}
+        self.service = make_service(self.options, self.records, price)
 
     def rank(self, job_class: JobClass,
              exclude_archs: Sequence[str] = ()) -> List[RankedConfig]:
-        runtime_hours: Dict[Tuple[Hashable, Hashable], float] = {}
-        jobs: List[str] = []
-        for r in self.records:
-            if not self.one_class and r.job_class is not job_class:
-                continue
-            if r.arch in exclude_archs:
-                continue
-            runtime_hours[(r.job_id, r.mesh)] = r.step_seconds * r.steps / 3600.0
-            if r.job_id not in jobs:
-                jobs.append(r.job_id)
-        return rank_generic(
-            runtime_hours, jobs, [o.name for o in self.options],
-            lambda name: self._by_name[name].hourly_cost(self.price))
+        klass = None if self.one_class else job_class
+        return list(self.service.rank(job_class=klass,
+                                      exclude_groups=tuple(exclude_archs)))
 
     def select(self, shape_name: str, *,
                annotation: Optional[JobClass] = None,
@@ -116,9 +122,12 @@ class TpuFlora:
         ``exclude_archs`` enforces the paper's no-recurrence discipline:
         the submitted architecture's own profiling data is not consulted.
         """
-        klass = classify_workload(shape_name, annotation)
-        ranked = self.rank(klass, exclude_archs=exclude_archs)
-        return self._by_name[ranked[0].config_id]
+        decision = self.service.submit(
+            shape_name,
+            annotation=annotation if not self.one_class else None,
+            exclude_groups=tuple(exclude_archs),
+            one_class=self.one_class)
+        return self._by_name[decision.config_id]
 
 
 # --- trace I/O (written by launch/dryrun.py, read by launch/train.py) ---------
@@ -143,3 +152,30 @@ def records_from_dryrun_report(report: Mapping) -> List[WorkloadRecord]:
 def load_records(path: str) -> List[WorkloadRecord]:
     with open(path) as f:
         return records_from_dryrun_report(json.load(f))
+
+
+def _mesh_topology(name: str, chips: int) -> Tuple[Tuple[int, ...],
+                                                   Tuple[str, ...]]:
+    """Recover (shape, axes) from a ``dp{N}xtp{M}`` mesh name
+    (the convention of :func:`repro.launch.mesh.mesh_options`); fall back
+    to a pure data-parallel topology for unrecognized names."""
+    m = re.fullmatch(r"dp(\d+)xtp(\d+)", name)
+    if m:
+        return (int(m.group(1)), int(m.group(2))), ("data", "model")
+    return (chips,), ("data",)
+
+
+def service_from_dryrun_report(report: Mapping, price: TpuPriceModel,
+                               *, generation: str = "v5e", chips: int = 256
+                               ) -> SelectionService:
+    """One-call bridge: dryrun JSON -> catalog + store -> service.
+
+    Mesh options are synthesised from the mesh names present in the report
+    (the dry-run profiled exactly those splits); their topology is
+    recovered from the ``dp{N}xtp{M}`` naming convention where possible.
+    """
+    recs = records_from_dryrun_report(report)
+    meshes = sorted({r.mesh for r in recs})
+    options = [MeshOption(m, generation, chips, *_mesh_topology(m, chips))
+               for m in meshes]
+    return make_service(options, recs, price)

@@ -82,6 +82,8 @@ class Trace:
                  records: Iterable[ExecutionRecord]):
         self.configs: List[CloudConfig] = list(configs)
         self.records: List[ExecutionRecord] = list(records)
+        self._by_index: Dict[int, CloudConfig] = {c.index: c
+                                                  for c in self.configs}
         self._by_key: Dict[Tuple[str, int], float] = {}
         self._jobs: Dict[str, JobSpec] = {}
         for r in self.records:
@@ -94,10 +96,7 @@ class Trace:
         return list(self._jobs.values())
 
     def config(self, index: int) -> CloudConfig:
-        for c in self.configs:
-            if c.index == index:
-                return c
-        raise KeyError(index)
+        return self._by_index[index]
 
     def runtime_s(self, job: JobSpec, config: CloudConfig) -> float:
         return self._by_key[(job.name, config.index)]

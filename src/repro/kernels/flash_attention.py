@@ -30,7 +30,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
     """One (b, h, iq) tile.  q_ref: (1,1,bq,D); k_ref/v_ref: (1,1,Sk,D)."""
     bq, D = q_ref.shape[2], q_ref.shape[3]
     iq = pl.program_id(2)
-    q = q_ref[0, 0].astype(jnp.float32) * scale
+    # index the loaded array, not the ref: scalar-int ref indices are
+    # unsupported by interpret-mode discharge in this pallas version
+    q = q_ref[...][0, 0].astype(jnp.float32) * scale
 
     nkv = seq_k // block_kv
     q0 = iq * bq
@@ -45,10 +47,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
 
     def body(j, carry):
         acc, m, l = carry
-        k = pl.load(k_ref, (0, 0, pl.dslice(j * block_kv, block_kv),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, 0, pl.dslice(j * block_kv, block_kv),
-                            slice(None))).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(0, 1),
+                            pl.dslice(j * block_kv, block_kv),
+                            slice(None)))[0, 0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(0, 1),
+                            pl.dslice(j * block_kv, block_kv),
+                            slice(None)))[0, 0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         qpos = q0 + lax.broadcasted_iota(jnp.int32, (bq, block_kv), 0)
@@ -74,7 +78,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
     m0 = jnp.full((bq,), NEG_INF, jnp.float32)
     l0 = jnp.zeros((bq,), jnp.float32)
     acc, m, l = lax.fori_loop(lo, hi, body, (acc0, m0, l0))
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    out = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    o_ref[...] = out[None, None]
 
 
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,

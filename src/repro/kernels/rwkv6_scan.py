@@ -27,21 +27,22 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, *,
     """One (b, h) stream.  r/k/v/w refs: (1, T, 1, N); u: (1, N);
     s0/sT: (1, 1, N, N); y: (1, T, 1, N)."""
     T, N = r_ref.shape[1], r_ref.shape[3]
-    u = u_ref[0].astype(jnp.float32)                     # (N,)
-    s = s0_ref[0, 0].astype(jnp.float32)                 # (N, N) rows=k, cols=v
+    # index the loaded arrays, not the refs: scalar-int ref indices are
+    # unsupported by interpret-mode discharge in this pallas version
+    u = u_ref[...][0].astype(jnp.float32)                # (N,)
+    s = s0_ref[...][0, 0].astype(jnp.float32)            # (N, N) rows=k, cols=v
 
     nchunks = T // chunk
 
     def chunk_body(c, s):
         t0 = c * chunk
-        r = pl.load(r_ref, (0, pl.dslice(t0, chunk), 0,
-                            slice(None))).astype(jnp.float32)
-        k = pl.load(k_ref, (0, pl.dslice(t0, chunk), 0,
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(t0, chunk), 0,
-                            slice(None))).astype(jnp.float32)
-        w = pl.load(w_ref, (0, pl.dslice(t0, chunk), 0,
-                            slice(None))).astype(jnp.float32)
+        def tchunk(ref):
+            return pl.load(ref, (pl.dslice(0, 1), pl.dslice(t0, chunk),
+                                 pl.dslice(0, 1), slice(None))
+                           )[0, :, 0].astype(jnp.float32)
+
+        r, k, v, w = tchunk(r_ref), tchunk(k_ref), tchunk(v_ref), \
+            tchunk(w_ref)
 
         def step(t, carry):
             s, ys = carry
@@ -54,12 +55,13 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, *,
 
         ys0 = jnp.zeros((chunk, N), jnp.float32)
         s, ys = lax.fori_loop(0, chunk, step, (s, ys0))
-        pl.store(y_ref, (0, pl.dslice(t0, chunk), 0, slice(None)),
-                 ys.astype(y_ref.dtype))
+        pl.store(y_ref, (pl.dslice(0, 1), pl.dslice(t0, chunk),
+                         pl.dslice(0, 1), slice(None)),
+                 ys.astype(y_ref.dtype)[None, :, None])
         return s
 
     s = lax.fori_loop(0, nchunks, chunk_body, s)
-    sT_ref[0, 0] = s.astype(sT_ref.dtype)
+    sT_ref[...] = s.astype(sT_ref.dtype)[None, None]
 
 
 def wkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,

@@ -21,8 +21,7 @@ import jax.numpy as jnp
 import repro.configs as configs
 from repro.configs import shapes as shapes_lib
 from repro.core.costmodel import TpuPriceModel
-from repro.core.tpu_flora import (MeshOption, TpuFlora,
-                                  records_from_dryrun_report)
+from repro.core.tpu_flora import service_from_dryrun_report
 from repro.data import pipeline as data_lib
 from repro.models import build_model, count_params
 from repro.models.types import ShapeSpec
@@ -32,17 +31,14 @@ from repro.train.train_loop import (StragglerWatchdog, TrainConfig,
 
 
 def select_mesh(report_path: str, market: str) -> str:
+    """Rank the dry-run-profiled meshes via the selection service."""
     with open(report_path) as f:
         report = json.load(f)
-    recs = records_from_dryrun_report(report)
-    meshes = sorted({r.mesh for r in recs})
-    options = [MeshOption(m, "v5e", 256, (16, 16), ("data", "model"))
-               for m in meshes]
-    flora = TpuFlora(options, recs, TpuPriceModel(market))
-    pick = flora.select("train_4k")
-    print(f"[flora] class B (streaming-compute) -> mesh {pick.name} "
-          f"at {pick.hourly_cost(TpuPriceModel(market)):.2f} $/h")
-    return pick.name
+    service = service_from_dryrun_report(report, TpuPriceModel(market))
+    decision = service.submit("train_4k")
+    print(f"[flora] class {decision.job_class.value} (streaming-compute) "
+          f"-> mesh {decision.config_id} at {decision.hourly_cost:.2f} $/h")
+    return str(decision.config_id)
 
 
 def main() -> None:

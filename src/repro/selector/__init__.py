@@ -1,0 +1,33 @@
+"""Unified, substrate-agnostic resource selection (the Flora pipeline).
+
+This package is the single public API for cloud/accelerator resource
+selection.  The paper's insight — normalized-cost ranking over a profiling
+trace is substrate-agnostic (§II) — is realised as four layers:
+
+  catalog  -- :class:`ResourceCatalog`: the ordered universe of selectable
+              configurations (GCP VM clusters, TPU slices, ...), each with
+              an id, resource totals and an hourly cost under a price source;
+  store    -- :class:`ProfilingStore`: dense (job x config) runtime-hours
+              matrices with incremental insert, partial-profiling masks and
+              versioned JSONL persistence;
+  rank     -- :func:`rank_dense`: the vectorized normalized-cost ranking
+              (runtime matrix x price vector, row-normalize, column-sum);
+  service  -- :class:`SelectionService`: ``submit(job, annotation) ->
+              Decision`` with per-(class, price-epoch) ranking caches.
+
+The legacy entry points (:class:`repro.core.flora.Flora`,
+:class:`repro.core.tpu_flora.TpuFlora`) remain as thin adapters over this
+package; new substrates should implement :class:`ResourceCatalog` directly.
+See DESIGN.md for the full architecture.
+"""
+from repro.selector.catalog import (BaseCatalog, GcpVmCatalog,
+                                    ResourceCatalog, TpuSliceCatalog)
+from repro.selector.rank import RankedConfig, rank_dense, rank_pairs
+from repro.selector.store import ProfilingStore
+from repro.selector.service import Decision, SelectionService
+
+__all__ = [
+    "BaseCatalog", "Decision", "GcpVmCatalog", "ProfilingStore",
+    "RankedConfig", "ResourceCatalog", "SelectionService", "TpuSliceCatalog",
+    "rank_dense", "rank_pairs",
+]

@@ -1,0 +1,149 @@
+"""SelectionService: the submit -> Decision facade over catalog + store.
+
+The service owns the pieces a deployed selector needs around the ranking
+math itself:
+
+  * **price epochs** — prices change while the trace does not (§II-D);
+    swapping the price source bumps an epoch counter and invalidates every
+    cached ranking;
+  * **ranking caches** — rankings depend only on (job class, exclusion
+    set, price epoch), so repeat submissions of same-class jobs are O(1)
+    dictionary hits (the serving-scale path: one ranking amortized over
+    thousands of submissions);
+  * **classification** — `submit` resolves the job's class from, in
+    order: the explicit annotation, the injected classifier, the store's
+    job metadata (Step 1 of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Callable, Dict, Hashable, Optional, Sequence,
+                    Tuple)
+
+from repro.core.trace import JobClass
+from repro.selector.catalog import BaseCatalog
+from repro.selector.rank import RankedConfig, rank_dense
+from repro.selector.store import ProfilingStore
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """The outcome of one submission."""
+
+    job_id: Hashable
+    job_class: Optional[JobClass]
+    config_id: Hashable
+    entry: Any                          # native config object
+    hourly_cost: float
+    ranking: Tuple[RankedConfig, ...]
+    from_cache: bool
+    price_epoch: int
+
+
+class SelectionService:
+    """Serving facade: ``submit(job, annotation) -> Decision``."""
+
+    def __init__(self, catalog: BaseCatalog, store: ProfilingStore,
+                 price_source: Optional[Any] = None,
+                 classifier: Optional[Callable[[Hashable],
+                                               JobClass]] = None,
+                 backend: str = "numpy"):
+        self.catalog = catalog
+        self.store = store
+        self.classifier = classifier
+        self.backend = backend
+        self._price_source = price_source
+        self._price_epoch = 0
+        self._cache: Dict[Tuple, Tuple[RankedConfig, ...]] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -- price management ---------------------------------------------------
+    @property
+    def price_epoch(self) -> int:
+        return self._price_epoch
+
+    @property
+    def price_source(self) -> Any:
+        return self._price_source
+
+    def set_price_source(self, price_source: Any) -> None:
+        """Swap in current prices; invalidates all cached rankings."""
+        self._price_source = price_source
+        self.invalidate_prices()
+
+    def invalidate_prices(self) -> None:
+        """Bump the price epoch (e.g. the same mutable source re-quoted)."""
+        self._price_epoch += 1
+        self._cache.clear()
+
+    # -- ranking (cached) ----------------------------------------------------
+    def rank(self, job_class: Optional[JobClass] = None,
+             exclude_groups: Sequence[str] = ()
+             ) -> Tuple[RankedConfig, ...]:
+        """Rank the whole catalog for a class (``None`` = all classes)."""
+        key = (self._price_epoch, self.store.version, job_class,
+               tuple(sorted(exclude_groups)))
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.cache_hits += 1
+            return hit
+        self.cache_misses += 1
+        jobs = self.store.select_jobs(job_class=job_class,
+                                      exclude_groups=exclude_groups)
+        if not jobs:
+            raise ValueError("no test jobs to learn from")
+        config_ids = self.catalog.ids()
+        hours, mask = self.store.matrix(job_ids=jobs, config_ids=config_ids)
+        prices = self.catalog.price_vector(self._price_source)
+        ranking = tuple(rank_dense(hours, mask, prices, config_ids,
+                                   job_ids=jobs, backend=self.backend))
+        self._cache[key] = ranking
+        return ranking
+
+    # -- the paper pipeline for one submitted job -----------------------------
+    def classify(self, job_id: Hashable,
+                 annotation: Optional[JobClass] = None
+                 ) -> Optional[JobClass]:
+        if annotation is not None:
+            return annotation
+        if self.classifier is not None:
+            return self.classifier(job_id)
+        if job_id in self.store.job_ids:
+            return self.store.meta(job_id).job_class
+        return None
+
+    def submit(self, job_id: Hashable, *,
+               annotation: Optional[JobClass] = None,
+               exclude_groups: Optional[Sequence[str]] = None,
+               one_class: bool = False) -> Decision:
+        """Classify, rank under current prices, pick the argmin.
+
+        ``exclude_groups`` defaults to the job's own group when the job is
+        already profiled (the paper's no-recurrence discipline, §III-A).
+        """
+        klass = None if one_class else self.classify(job_id, annotation)
+        if exclude_groups is None:
+            exclude_groups = ()
+            if job_id in self.store.job_ids:
+                own = self.store.meta(job_id).group
+                if own is not None:
+                    exclude_groups = (own,)
+        before = self.cache_hits
+        ranking = self.rank(job_class=klass,
+                            exclude_groups=tuple(exclude_groups))
+        winner = ranking[0]
+        if winner.score == float("inf"):
+            # every catalog entry is unprofiled for this selection
+            # (catalog/store id mismatch, or a fully-masked trace) —
+            # an arbitrary pick must never look like a decision.
+            raise ValueError(
+                f"no profiled configurations to rank for job {job_id!r} "
+                f"(class {klass})")
+        return Decision(
+            job_id=job_id, job_class=klass, config_id=winner.config_id,
+            entry=self.catalog.entry(winner.config_id),
+            hourly_cost=self.catalog.hourly_cost(winner.config_id,
+                                                 self._price_source),
+            ranking=ranking, from_cache=self.cache_hits > before,
+            price_epoch=self._price_epoch)

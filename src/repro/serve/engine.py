@@ -9,6 +9,13 @@ tensors are a documented extension).
 
 ``serve_step`` — one token for the whole batch against the KV/recurrent
 state — is the unit the dry-run lowers for the ``decode_*`` cells.
+
+Fleet placement: :func:`plan_decode_placement` asks a
+:class:`repro.selector.SelectionService` which profiled mesh the decode
+fleet should run on under current chip prices (DESIGN.md §3); the
+resulting :class:`repro.selector.Decision` can be attached to the engine
+as ``placement`` so serving metadata records where (and at what $/h) the
+batch is meant to run.
 """
 from __future__ import annotations
 
@@ -21,6 +28,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.types import ModelConfig
+from repro.selector import Decision, SelectionService
+
+
+def plan_decode_placement(service: SelectionService,
+                          shape_name: str = "decode_32k",
+                          *, annotation=None,
+                          exclude_archs: Tuple[str, ...] = ()) -> Decision:
+    """Pick the mesh for a decode fleet via the selection service.
+
+    ``shape_name`` is the workload cell the fleet serves (class A,
+    state-resident, unless annotated otherwise); the service ranks every
+    profiled mesh option by summed normalized cost under current prices.
+    """
+    return service.submit(shape_name, annotation=annotation,
+                          exclude_groups=exclude_archs)
 
 
 @dataclasses.dataclass
@@ -43,13 +65,15 @@ class Engine:
     """Greedy-decoding engine over a fixed slot batch."""
 
     def __init__(self, model, params, *, slots: int, max_len: int,
-                 enc_len: int = 0):
+                 enc_len: int = 0, placement: Optional[Decision] = None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.enc_len = enc_len
+        #: where this fleet is meant to run (selector decision), if planned.
+        self.placement = placement
 
         self._prefill = jax.jit(
             lambda p, b, s: model.prefill(p, b, s))

@@ -1,0 +1,42 @@
+"""Optional-hypothesis shim for mixed test modules.
+
+``hypothesis`` is a test-only extra (see pyproject.toml).  Modules whose
+tests are *all* property-based guard themselves with a module-level
+``pytest.importorskip("hypothesis")``; mixed modules import the decorators
+from here instead, so their example-based tests still run when hypothesis
+is absent and only the property tests skip (via ``pytest.importorskip``
+at call time).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``strategies`` at decoration time only."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # No functools.wraps: the wrapper must expose a zero-arg
+            # signature, or pytest would resolve the strategy parameters
+            # as fixtures.
+            def wrapper():
+                pytest.importorskip("hypothesis")
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -1,0 +1,104 @@
+"""Property tests for the vectorized normalized-cost ranking.
+
+Moved out of test_flora_core.py so the paper-claim tests run without the
+optional ``hypothesis`` extra (this whole module skips when it is absent).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.selector import rank_dense, rank_pairs  # noqa: E402
+
+
+@st.composite
+def runtime_tables(draw):
+    n_jobs = draw(st.integers(2, 6))
+    n_cfgs = draw(st.integers(2, 6))
+    jobs = [f"j{i}" for i in range(n_jobs)]
+    cfgs = [f"c{i}" for i in range(n_cfgs)]
+    rt = {(j, c): draw(st.floats(0.01, 100.0, allow_nan=False))
+          for j in jobs for c in cfgs}
+    prices = {c: draw(st.floats(0.1, 50.0, allow_nan=False)) for c in cfgs}
+    return jobs, cfgs, rt, prices
+
+
+@settings(max_examples=50, deadline=None)
+@given(runtime_tables())
+def test_rank_scale_invariance(table):
+    """Scaling one test job's runtimes doesn't change the ranking (the
+    per-job normalization makes each test job weight equal)."""
+    jobs, cfgs, rt, prices = table
+    base = rank_pairs(rt, jobs, cfgs, prices.__getitem__)
+    scaled = dict(rt)
+    for c in cfgs:
+        scaled[(jobs[0], c)] = rt[(jobs[0], c)] * 37.5
+    again = rank_pairs(scaled, jobs, cfgs, prices.__getitem__)
+    assert [r.config_id for r in base] == [r.config_id for r in again]
+    for a, b in zip(base, again):
+        assert a.score == pytest.approx(b.score, rel=1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(runtime_tables())
+def test_rank_price_scale_invariance(table):
+    """Uniformly scaling all prices (currency change) keeps the ranking."""
+    jobs, cfgs, rt, prices = table
+    base = rank_pairs(rt, jobs, cfgs, prices.__getitem__)
+    again = rank_pairs(rt, jobs, cfgs, lambda c: prices[c] * 0.731)
+    assert [r.config_id for r in base] == [r.config_id for r in again]
+
+
+@settings(max_examples=50, deadline=None)
+@given(runtime_tables())
+def test_rank_scores_lower_bounded(table):
+    """Every score >= n_jobs (each normalized cost >= 1), and some config
+    achieves score == n_jobs iff one config is optimal for every job."""
+    jobs, cfgs, rt, prices = table
+    ranked = rank_pairs(rt, jobs, cfgs, prices.__getitem__)
+    for r in ranked:
+        assert r.score >= len(jobs) - 1e-9
+        assert r.mean_norm_cost >= 1 - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(runtime_tables(), st.integers(0, 5))
+def test_rank_dominated_config_never_wins(table, seed):
+    """A config strictly worse than another on every job never ranks first."""
+    jobs, cfgs, rt, prices = table
+    dom, loser = cfgs[0], "loser"
+    cfgs2 = cfgs + [loser]
+    rt2 = dict(rt)
+    for j in jobs:
+        rt2[(j, loser)] = rt[(j, dom)] * 2.0
+    prices2 = dict(prices)
+    prices2[loser] = prices[dom] * 1.5
+    ranked = rank_pairs(rt2, jobs, cfgs2, prices2.__getitem__)
+    assert ranked[0].config_id != loser
+
+
+@settings(max_examples=25, deadline=None)
+@given(runtime_tables())
+def test_rank_jax_backend_agrees_with_numpy(table):
+    """The jitted jax kernel ranks identically to the float64 numpy path
+    (scores agree to float32 precision)."""
+    jobs, cfgs, rt, prices = table
+    base = rank_pairs(rt, jobs, cfgs, prices.__getitem__)
+    jx = rank_pairs(rt, jobs, cfgs, prices.__getitem__, backend="jax")
+    for a, b in zip(base, jx):
+        assert a.score == pytest.approx(b.score, rel=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(runtime_tables())
+def test_rank_dense_equals_pairs(table):
+    """Densifying by hand and calling rank_dense matches rank_pairs."""
+    import numpy as np
+    jobs, cfgs, rt, prices = table
+    hours = np.asarray([[rt[(j, c)] for c in cfgs] for j in jobs])
+    mask = np.ones_like(hours, dtype=bool)
+    pv = np.asarray([prices[c] for c in cfgs])
+    a = rank_dense(hours, mask, pv, cfgs, job_ids=jobs)
+    b = rank_pairs(rt, jobs, cfgs, prices.__getitem__)
+    assert [(r.config_id, r.score) for r in a] == \
+        [(r.config_id, r.score) for r in b]

@@ -1,0 +1,308 @@
+"""Tests for the unified repro.selector API.
+
+Covers the tentpole acceptance criteria: old-vs-new ranking parity on the
+paper's 180-cell trace, ProfilingStore JSONL round-trips, and
+SelectionService cache behaviour under price changes.
+"""
+import pytest
+
+from repro.core import costmodel, spark_sim
+from repro.core.costmodel import TpuPriceModel
+from repro.core.flora import Flora
+from repro.core.tpu_flora import (MeshOption, TpuFlora, WorkloadRecord,
+                                  make_service)
+from repro.core.trace import JobClass
+from repro.selector import (GcpVmCatalog, ProfilingStore, SelectionService,
+                            TpuSliceCatalog, rank_dense, rank_pairs)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return spark_sim.generate_trace(seed=0)
+
+
+@pytest.fixture(scope="module")
+def price():
+    return costmodel.LinearPriceModel()
+
+
+# --- the historical implementation, kept verbatim as the parity oracle ---------
+
+def _legacy_rank_generic(runtime_hours, jobs, config_ids, hourly_cost):
+    scores = {c: 0.0 for c in config_ids}
+    counts = {c: 0 for c in config_ids}
+    for j in jobs:
+        costs = {c: runtime_hours[(j, c)] * hourly_cost(c)
+                 for c in config_ids if (j, c) in runtime_hours}
+        if not costs:
+            continue
+        best = min(costs.values())
+        for c, v in costs.items():
+            scores[c] += v / best
+            counts[c] += 1
+    order = {c: i for i, c in enumerate(config_ids)}
+    ranked = [(c, scores[c],
+               scores[c] / counts[c] if counts[c] else float("inf"))
+              for c in config_ids]
+    ranked.sort(key=lambda r: (r[1], order[r[0]]))
+    return ranked
+
+
+def _legacy_flora_rank(trace, price, job_class, exclude_algorithms=()):
+    test_jobs = trace.filter_jobs(job_class=job_class,
+                                  exclude_algorithms=exclude_algorithms)
+    runtime_hours = {
+        (j.name, c.index): trace.runtime_s(j, c) / 3600.0
+        for j in test_jobs for c in trace.configs if trace.has(j, c)}
+    by_index = {c.index: c for c in trace.configs}
+    return _legacy_rank_generic(
+        runtime_hours, [j.name for j in test_jobs],
+        [c.index for c in trace.configs],
+        lambda idx: price(by_index[idx]))
+
+
+# --- old-vs-new parity on the paper's 180-cell trace (Tables IV-V) --------------
+
+@pytest.mark.parametrize("job_class", [JobClass.A, JobClass.B, None])
+def test_rank_parity_with_legacy_loop(trace, price, job_class):
+    flora = Flora(trace, price, one_class=job_class is None)
+    new = flora.rank(job_class if job_class else JobClass.A)
+    old = _legacy_flora_rank(trace, price, job_class)
+    assert [r.config_id for r in new] == [c for c, _, _ in old]
+    for r, (_, score, mean) in zip(new, old):
+        assert r.score == pytest.approx(score, rel=1e-12)
+        assert r.mean_norm_cost == pytest.approx(mean, rel=1e-12)
+
+
+def test_rank_parity_leave_one_out_all_algorithms(trace, price):
+    """The argmin (and full ordering) matches the legacy path for every
+    leave-one-algorithm-out submission of the evaluation (§III-A)."""
+    flora = Flora(trace, price)
+    for job in trace.jobs:
+        new = flora.rank(job.job_class, exclude_algorithms=(job.algorithm,))
+        old = _legacy_flora_rank(trace, price, job.job_class,
+                                 exclude_algorithms=(job.algorithm,))
+        assert [r.config_id for r in new] == [c for c, _, _ in old], job.name
+    # the paper's headline picks survive the port: A -> #9, B -> #1
+    for job in trace.jobs:
+        sel = flora.select_for_job(job)
+        assert sel.index == (9 if job.job_class is JobClass.A else 1)
+
+
+def test_tpu_rank_parity_with_legacy_loop():
+    options = [
+        MeshOption("dp256xtp1", "v5e", 256, (256, 1), ("data", "model")),
+        MeshOption("dp16xtp16", "v5e", 256, (16, 16), ("data", "model")),
+        MeshOption("v5p-dp16xtp16", "v5p", 256, (16, 16), ("data", "model")),
+    ]
+    speed = {"dp256xtp1": 4.0, "dp16xtp16": 1.0, "v5p-dp16xtp16": 0.55}
+    recs = [WorkloadRecord(arch=a, shape="decode_32k", mesh=m,
+                           step_seconds=s)
+            for a in ("a1", "a2") for m, s in speed.items()]
+    price = TpuPriceModel("ondemand")
+    flora = TpuFlora(options, recs, price)
+    new = flora.rank(JobClass.A)
+    rt = {(r.job_id, r.mesh): r.step_seconds / 3600.0 for r in recs}
+    by_name = {o.name: o for o in options}
+    old = _legacy_rank_generic(
+        rt, ["a1:decode_32k", "a2:decode_32k"], [o.name for o in options],
+        lambda n: by_name[n].hourly_cost(price))
+    assert [r.config_id for r in new] == [c for c, _, _ in old]
+    for r, (_, score, _) in zip(new, old):
+        assert r.score == pytest.approx(score, rel=1e-12)
+
+
+# --- ProfilingStore -------------------------------------------------------------
+
+def test_store_jsonl_roundtrip(trace, tmp_path):
+    store = ProfilingStore.from_trace(trace)
+    path = str(tmp_path / "trace.jsonl")
+    store.save_jsonl(path)
+    clone = ProfilingStore.load_jsonl(path)
+    assert clone.config_ids == store.config_ids
+    assert clone.job_ids == store.job_ids
+    assert len(clone) == len(store) == 180
+    for j in store.job_ids[:5]:
+        assert clone.meta(j) == store.meta(j)
+        for c in store.config_ids:
+            assert clone.runtime_hours(j, c) == store.runtime_hours(j, c)
+
+
+def test_store_rejects_wrong_format(tmp_path):
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write('{"format": "something-else", "version": 1}\n')
+    with pytest.raises(ValueError, match="not a profiling store"):
+        ProfilingStore.load_jsonl(path)
+    with open(path, "w") as f:
+        f.write('{"format": "repro.selector.profiling-store", "version": 99}\n')
+    with pytest.raises(ValueError, match="version"):
+        ProfilingStore.load_jsonl(path)
+
+
+def test_store_incremental_insert_and_partial_mask():
+    store = ProfilingStore(config_ids=["c1", "c2"])
+    store.add("j1", "c1", 1.0, job_class=JobClass.A, group="g1")
+    store.add("j1", "c2", 2.0)
+    store.add("j2", "c1", 3.0, job_class=JobClass.B, group="g2")
+    store.add("j2", "c3", 4.0)          # new config appended on first sight
+    assert store.config_ids == ["c1", "c2", "c3"]
+    hours, mask = store.matrix()
+    assert hours.shape == (2, 3)
+    assert mask.tolist() == [[True, True, False], [True, False, True]]
+    assert store.meta("j1").job_class is JobClass.A   # meta survives updates
+    assert store.select_jobs(job_class=JobClass.B) == ["j2"]
+    assert store.select_jobs(exclude_groups=("g1",)) == ["j2"]
+    with pytest.raises(ValueError, match="non-positive"):
+        store.add("j3", "c1", 0.0)
+
+
+def test_partial_profiling_jobs_contribute_where_profiled():
+    """A job profiled on a subset of configs contributes only there (the
+    paper's partial re-profiling, §II-B)."""
+    rt = {("j1", "c1"): 1.0, ("j1", "c2"): 4.0, ("j2", "c2"): 1.0}
+    ranked = rank_pairs(rt, ["j1", "j2"], ["c1", "c2"], lambda c: 1.0)
+    by_id = {r.config_id: r for r in ranked}
+    assert by_id["c1"].score == pytest.approx(1.0)    # only j1's norm
+    assert by_id["c2"].score == pytest.approx(5.0)    # j1: 4.0, j2: 1.0
+
+
+# --- catalogs -------------------------------------------------------------------
+
+def test_gcp_catalog_prices_match_model(trace, price):
+    cat = GcpVmCatalog(trace.configs, price)
+    vec = cat.price_vector()
+    for i, c in enumerate(trace.configs):
+        assert vec[i] == pytest.approx(price(c))
+        assert cat.entry(c.index) is c
+        assert cat.describe(c.index)["cores"] == c.total_cores
+    with pytest.raises(ValueError, match="price source"):
+        GcpVmCatalog(trace.configs).price_vector()
+
+
+def test_tpu_catalog_prices_and_override():
+    opts = [MeshOption("a", "v5e", 256, (256,), ("data",)),
+            MeshOption("b", "v5p", 256, (256,), ("data",))]
+    cat = TpuSliceCatalog(opts, TpuPriceModel("ondemand"))
+    assert cat.hourly_cost("a") == pytest.approx(1.20 * 256)
+    spot = cat.price_vector(TpuPriceModel("spot"))
+    assert spot[1] == pytest.approx(2.10 * 256)
+
+
+# --- SelectionService: caching + price invalidation ------------------------------
+
+def _tpu_service(price):
+    options = [
+        MeshOption("dp256xtp1", "v5e", 256, (256, 1), ("data", "model")),
+        MeshOption("dp16xtp16", "v5e", 256, (16, 16), ("data", "model")),
+        MeshOption("v5p-dp16xtp16", "v5p", 256, (16, 16), ("data", "model")),
+    ]
+    speed = {"dp256xtp1": {"train": 1.0, "decode": 4.0},
+             "dp16xtp16": {"train": 1.5, "decode": 1.0},
+             "v5p-dp16xtp16": {"train": 0.8, "decode": 0.55}}
+    recs = [WorkloadRecord(arch=a, shape=shape, mesh=m, step_seconds=s[kind])
+            for a in ("a1", "a2")
+            for shape, kind in (("train_4k", "train"),
+                                ("decode_32k", "decode"))
+            for m, s in speed.items()]
+    return make_service(options, recs, price)
+
+
+def test_service_caches_per_class_and_epoch():
+    svc = _tpu_service(TpuPriceModel("ondemand"))
+    d1 = svc.submit("decode_32k")
+    assert not d1.from_cache and svc.cache_misses == 1
+    d2 = svc.submit("decode_32k")
+    assert d2.from_cache and svc.cache_hits == 1
+    assert d2.config_id == d1.config_id
+    svc.submit("train_4k")                    # different class: new entry
+    assert svc.cache_misses == 2
+    svc.submit("decode_32k", exclude_groups=("a1",))   # new exclusion key
+    assert svc.cache_misses == 3
+
+
+def test_service_price_change_invalidates_and_reroutes():
+    """Flora's defining property end-to-end: when v5p drops to v5e prices,
+    the cached v5e decision is invalidated and v5p's speed wins."""
+    svc = _tpu_service(TpuPriceModel("ondemand"))
+    before = svc.submit("decode_32k")
+    assert before.entry.generation == "v5e"
+    assert before.price_epoch == 0
+    svc.set_price_source(TpuPriceModel(rates={"v5p": 1.2, "v5e": 1.2}))
+    after = svc.submit("decode_32k")
+    assert not after.from_cache                # cache was invalidated
+    assert after.price_epoch == 1
+    assert after.entry.generation == "v5p"
+    again = svc.submit("decode_32k")
+    assert again.from_cache                    # re-cached under new epoch
+
+
+def test_service_profiled_job_gets_own_group_excluded(trace, price):
+    svc = SelectionService(GcpVmCatalog(trace.configs, price),
+                           ProfilingStore.from_trace(trace), price)
+    job = trace.jobs[0]                        # profiled: auto-excludes own
+    d = svc.submit(job.name)
+    flora = Flora(trace, price)
+    assert d.config_id == flora.select_for_job(job).index
+    assert d.job_class is job.job_class        # class from store metadata
+
+
+def test_service_empty_class_raises():
+    svc = _tpu_service(TpuPriceModel())
+    with pytest.raises(ValueError, match="no test jobs"):
+        svc.rank(job_class=JobClass.A, exclude_groups=("a1", "a2"))
+
+
+def test_service_store_insert_invalidates_cache():
+    """Streamed-in profiling cells must not be masked by a stale cached
+    ranking (the store's mutation counter is part of the cache key)."""
+    svc = _tpu_service(TpuPriceModel("ondemand"))
+    first = svc.submit("decode_32k")
+    assert first.config_id == "dp16xtp16"
+    # new measurements arrive: dp256xtp1 is suddenly the fastest decoder
+    for arch in ("a1", "a2"):
+        svc.store.add(f"{arch}:decode_32k", "dp256xtp1", 0.01 / 3600,
+                      job_class=JobClass.A, group=arch)
+    again = svc.submit("decode_32k")
+    assert not again.from_cache
+    assert again.config_id == "dp256xtp1"
+
+
+def test_service_all_unprofiled_catalog_raises():
+    """A catalog/store id mismatch must raise, not return an arbitrary
+    first catalog entry as a confident-looking Decision."""
+    opts = [MeshOption("typo-mesh", "v5e", 256, (256,), ("data",))]
+    recs = [WorkloadRecord(arch="a1", shape="decode_32k",
+                           mesh="real-mesh", step_seconds=1.0)]
+    svc = make_service(opts, recs, TpuPriceModel())
+    with pytest.raises(ValueError, match="no profiled configurations"):
+        svc.submit("decode_32k")
+
+
+def test_dryrun_mesh_topology_recovered():
+    from repro.core.tpu_flora import service_from_dryrun_report
+    report = {"cells": [
+        {"arch": "a", "shape": "train_4k", "mesh": "dp16xtp16", "ok": True,
+         "roofline": {"compute_s": .2, "memory_s": .1, "collective_s": .05}},
+        {"arch": "a", "shape": "train_4k", "mesh": "oddname", "ok": True,
+         "roofline": {"compute_s": .3, "memory_s": .1, "collective_s": .05}},
+    ]}
+    svc = service_from_dryrun_report(report, TpuPriceModel())
+    named = svc.catalog.entry("dp16xtp16")
+    assert named.mesh_shape == (16, 16)
+    assert named.mesh_axes == ("data", "model")
+    odd = svc.catalog.entry("oddname")
+    assert odd.mesh_shape == (256,) and odd.mesh_axes == ("data",)
+
+
+# --- vectorized rank error paths -------------------------------------------------
+
+def test_rank_dense_rejects_empty_and_nonpositive():
+    import numpy as np
+    with pytest.raises(ValueError, match="no test jobs"):
+        rank_dense(np.zeros((0, 2)), np.zeros((0, 2), bool),
+                   np.ones(2), ["a", "b"])
+    hours = np.asarray([[1.0, 0.0]])
+    mask = np.ones_like(hours, dtype=bool)
+    with pytest.raises(ValueError, match="non-positive cost for job 'j'"):
+        rank_dense(hours, mask, np.ones(2), ["a", "b"], job_ids=["j"])

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyputil import given, settings, st
 
 import repro.configs as C
 from repro.configs import shapes as S
