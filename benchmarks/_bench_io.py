@@ -1,0 +1,33 @@
+"""Shared CSV + machine-readable JSON emission for the benchmark scripts.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows to stdout
+and mirrors them into a ``BENCH_*.json`` file (path overridable via an
+env var) that CI uploads as the perf-trajectory artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+
+class BenchRows:
+    """Collects rows and writes them as the benchmark's JSON artifact."""
+
+    def __init__(self, env_var: str, default_path: str):
+        self.rows: List[Dict[str, Any]] = []
+        self.env_var = env_var
+        self.default_path = default_path
+
+    def emit(self, name: str, us_per_call: float, derived: str) -> None:
+        self.rows.append({"name": name,
+                          "us_per_call": round(us_per_call, 1),
+                          "derived": derived})
+        print(f"{name},{us_per_call:.1f},{derived}")
+
+    def write_json(self) -> None:
+        path = os.environ.get(self.env_var, self.default_path)
+        with open(path, "w") as f:
+            json.dump(self.rows, f, indent=2)
+        print(f"# wrote {path}", file=sys.stderr)

@@ -1,0 +1,175 @@
+"""Live-market benchmarks: incremental reprice + the selection daemon.
+
+    PYTHONPATH=src python benchmarks/market_bench.py
+
+Two claims are enforced (ISSUE 2 acceptance):
+
+  * incremental ``RankState.reprice`` beats a full ``rank_dense`` by >=5x
+    at 10k configs with <=1% of prices changed per tick, with rankings
+    **bit-identical** to the cold path (exact float equality, not approx).
+    The gated comparison is the per-tick update (what ``SelectionService``
+    pays per tick — rankings materialize lazily on the next submission);
+    the ``+materialize`` row reports the tick+first-submission end-to-end
+    cost, where building/sorting the C ``RankedConfig`` objects dominates
+    *both* paths equally and compresses the ratio;
+  * ``SelectionDaemon`` sustains a 10k-event mixed submission/tick stream
+    deterministically — the same seed yields a byte-identical journal.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes the same rows as
+machine-readable ``BENCH_market.json`` (override the path with the
+``BENCH_MARKET_JSON`` env var) so CI can track the perf trajectory.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from _bench_io import BenchRows
+from repro.core.trace import JobClass
+from repro.market import SelectionDaemon, SimulatedSpotFeed, synthetic_stream
+from repro.selector import (BaseCatalog, PriceTable, ProfilingStore,
+                            RankState, SelectionService, rank_dense)
+
+ROWS = BenchRows("BENCH_MARKET_JSON", "BENCH_market.json")
+emit = ROWS.emit
+write_json = ROWS.write_json
+
+
+# --- incremental reprice vs full rank_dense ----------------------------------
+
+def _universe(n_jobs: int, n_cfgs: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    hours = rng.uniform(0.05, 10.0, size=(n_jobs, n_cfgs))
+    mask = rng.random((n_jobs, n_cfgs)) > 0.15        # partial profiling
+    mask[np.arange(n_jobs), rng.integers(0, n_cfgs, n_jobs)] = True
+    prices = rng.uniform(0.5, 20.0, size=n_cfgs)
+    ids = [f"c{i}" for i in range(n_cfgs)]
+    return hours, mask, prices, ids, rng
+
+
+def _delta_batches(ids, prices, rng, n_ticks: int, frac: float):
+    batches = []
+    for _ in range(n_ticks):
+        k = max(1, int(len(ids) * frac))
+        cols = rng.choice(len(ids), k, replace=False)
+        batches.append({ids[c]: float(prices[c] * rng.uniform(0.5, 2.0))
+                        for c in cols})
+    return batches
+
+
+def bench_reprice(n_jobs: int, n_cfgs: int, frac: float,
+                  n_ticks: int = 10) -> None:
+    hours, mask, prices, ids, rng = _universe(n_jobs, n_cfgs)
+    batches = _delta_batches(ids, prices, rng, n_ticks, frac)
+
+    # identity sweep (untimed): every tick bit-identical to the cold path
+    state = RankState(hours, mask, prices, ids)
+    live = prices.copy()
+    identical = True
+    for batch in batches:
+        state.reprice(batch)
+        for cid, p in batch.items():
+            live[int(cid[1:])] = p
+        cold = rank_dense(hours, mask, live, ids)
+        inc = state.ranking()
+        if [(r.config_id, r.score, r.mean_norm_cost) for r in cold] != \
+                [(r.config_id, r.score, r.mean_norm_cost) for r in inc]:
+            identical = False
+            break
+
+    # timed: the per-tick update (the service's tick cost; rankings
+    # materialize lazily) vs a cold rank_dense per tick
+    state = RankState(hours, mask, prices, ids)
+    t0 = time.perf_counter()
+    for batch in batches:
+        state.reprice(batch)
+    us_reprice = (time.perf_counter() - t0) / n_ticks * 1e6
+    t0 = time.perf_counter()
+    for _ in batches:
+        rank_dense(hours, mask, state.prices, ids)
+    us_full = (time.perf_counter() - t0) / n_ticks * 1e6
+    # end-to-end tick+submission: both paths build the RankedConfig list
+    state = RankState(hours, mask, prices, ids)
+    t0 = time.perf_counter()
+    for batch in batches:
+        state.reprice(batch)
+        state.ranking()
+    us_e2e = (time.perf_counter() - t0) / n_ticks * 1e6
+
+    speedup = us_full / us_reprice
+    emit(f"reprice_{n_jobs}x{n_cfgs}_{frac:.0%}", us_reprice,
+         f"cells={n_jobs * n_cfgs};full_rank_us={us_full:.1f};"
+         f"speedup={speedup:.1f}x;target_5x={speedup >= 5.0};"
+         f"bit_identical={identical}")
+    emit(f"reprice_{n_jobs}x{n_cfgs}_{frac:.0%}+materialize", us_e2e,
+         f"full_rank_us={us_full:.1f};"
+         f"end_to_end_speedup={us_full / us_e2e:.1f}x;"
+         f"materialize_us={us_e2e - us_reprice:.1f}")
+
+
+# --- the 10k-event daemon stream ---------------------------------------------
+
+class _SynthCatalog(BaseCatalog):
+    """Catalog whose entries are their own ids (PriceTable does pricing)."""
+
+    def entry(self, entry_id):
+        return entry_id
+
+    def describe(self, entry_id):
+        return {}
+
+
+def _daemon(n_jobs: int = 24, n_cfgs: int = 128, seed: int = 7
+            ) -> SelectionDaemon:
+    rng = np.random.default_rng(seed)
+    ids = [f"cfg{i}" for i in range(n_cfgs)]
+    store = ProfilingStore(config_ids=ids)
+    for j in range(n_jobs):
+        klass = JobClass.A if j % 2 else JobClass.B
+        for c in range(n_cfgs):
+            if rng.random() < 0.2:
+                continue                      # partial profiling
+            store.add(f"job{j}", ids[c], float(rng.uniform(0.1, 5.0)),
+                      job_class=klass, group=f"g{j % 6}")
+    table = PriceTable({c: float(rng.uniform(1.0, 30.0)) for c in ids})
+    service = SelectionService(_SynthCatalog(ids), store, table)
+    feed = SimulatedSpotFeed(dict(table.items()), seed=seed,
+                             change_fraction=0.01)
+    return SelectionDaemon(service, feed)
+
+
+def bench_daemon(n_events: int = 10_000, seed: int = 7) -> None:
+    daemon = _daemon(seed=seed)
+    jobs = daemon.service.store.job_ids
+    t0 = time.perf_counter()
+    stats = daemon.run(synthetic_stream(jobs, n_events, seed=seed))
+    dt = time.perf_counter() - t0
+    # determinism: a fresh universe + the same seed => byte-identical journal
+    again = _daemon(seed=seed)
+    again.run(synthetic_stream(jobs, n_events, seed=seed))
+    deterministic = again.journal_dump() == daemon.journal_dump()
+    svc = daemon.service
+    hit_rate = svc.cache_hits / max(1, svc.cache_hits + svc.cache_misses)
+    emit(f"daemon_{n_events}ev", dt / n_events * 1e6,
+         f"events_per_s={n_events / dt:.0f};decisions={stats.decisions};"
+         f"ticks={stats.ticks};epochs={stats.epochs};"
+         f"deltas={stats.deltas};cache_hit_rate={hit_rate:.3f};"
+         f"incremental_refreshes={svc.reprice_refreshes};"
+         f"deterministic={deterministic}")
+
+
+def main(smoke: bool = False) -> None:
+    print("name,us_per_call,derived")
+    bench_reprice(64, 1_000, 0.01)
+    bench_reprice(64, 10_000, 0.01)
+    if not smoke:
+        bench_reprice(64, 10_000, 0.001)
+        bench_reprice(256, 10_000, 0.01)
+    bench_daemon(2_000 if smoke else 10_000)
+    write_json()
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

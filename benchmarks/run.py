@@ -3,7 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV rows: ``us_per_call`` is the wall
 time of one full experiment computation (the paper's headline claim is that
 Flora's *selection overhead is negligible* — milliseconds); ``derived`` is
-the experiment's headline number(s).
+the experiment's headline number(s).  The same rows are written as
+machine-readable ``BENCH_selector.json`` (override the path with the
+``BENCH_SELECTOR_JSON`` env var) so CI can track the perf trajectory.
 """
 from __future__ import annotations
 
@@ -15,6 +17,13 @@ import time
 from repro.core import costmodel, evaluate, spark_sim
 from repro.core.flora import Flora
 from repro.core.trace import JobClass, PAPER_JOBS
+
+from _bench_io import BenchRows
+
+ROWS = BenchRows("BENCH_SELECTOR_JSON", "BENCH_selector.json")
+emit = ROWS.emit
+write_json = ROWS.write_json
+
 
 
 def _timed(fn, *args, repeat: int = 1, **kw):
@@ -32,7 +41,7 @@ def bench_table3_trace_stats(trace, price):
                f"rt_mean={stats['runtime_s']['mean']:.0f};"
                f"rt_max={stats['runtime_s']['max']:.0f}"
                f" (paper: 1.409/1835/21715)")
-    print(f"table3_trace_stats,{us:.1f},{derived}")
+    emit("table3_trace_stats", us, derived)
 
 
 def bench_table4_selection(trace, price):
@@ -42,7 +51,7 @@ def bench_table4_selection(trace, price):
         f"{name}={by[name].mean_norm_cost:.3f}"
         for name in ("Flora", "Flora with one class", "Juggler", "Crispy"))
     derived += " (paper: Flora=1.052;Fw1C=1.336;Juggler=1.334;Crispy=1.384)"
-    print(f"table4_selection,{us:.1f},{derived}")
+    emit("table4_selection", us, derived)
 
 
 def bench_table5_perjob(trace, price):
@@ -56,7 +65,7 @@ def bench_table5_perjob(trace, price):
     derived = (f"flora_mean={flora.mean_norm_cost:.3f};max={worst:.3f};"
                f"classA_picks={sorted(a_picks)};classB_picks={sorted(b_picks)}"
                f" (paper: A->9, B->1, mean 1.052)")
-    print(f"table5_perjob,{us:.1f},{derived}")
+    emit("table5_perjob", us, derived)
 
 
 def bench_fig2_price_sweep(trace, price):
@@ -69,7 +78,7 @@ def bench_fig2_price_sweep(trace, price):
     derived = (f"points={len(ratios)};"
                f"flora_max_over_sweep={max(curves['Flora']):.3f};"
                f"flora_always_best={always_best}")
-    print(f"fig2_price_sweep,{us:.1f},{derived}")
+    emit("fig2_price_sweep", us, derived)
 
 
 def bench_fig3_misclassification(trace, price):
@@ -79,7 +88,7 @@ def bench_fig3_misclassification(trace, price):
     derived = (f"crossover_vs_fw1c={x:.3f} (paper: ~1/3);"
                f"coinflip={curves['Flora'][10]:.3f};"
                f"random={curves['random selection'][0]:.3f}")
-    print(f"fig3_misclassification,{us + us2:.1f},{derived}")
+    emit("fig3_misclassification", us + us2, derived)
 
 
 def bench_selection_overhead(trace, price):
@@ -87,8 +96,8 @@ def bench_selection_overhead(trace, price):
     flora = Flora(trace, price)
     job = PAPER_JOBS[0]
     _, us = _timed(lambda: flora.select_for_job(job), repeat=200)
-    print(f"selection_overhead,{us:.1f},paper_claims_milliseconds="
-          f"{us < 10_000}")
+    emit("selection_overhead", us,
+         f"paper_claims_milliseconds={us < 10_000}")
 
 
 def bench_tpu_selection():
@@ -97,17 +106,18 @@ def bench_tpu_selection():
     from repro.core.tpu_flora import service_from_dryrun_report
     path = os.environ.get("DRYRUN_REPORT", "dryrun_single.json")
     if not os.path.exists(path):
-        print("tpu_selection,0.0,skipped=no_dryrun_report")
+        emit("tpu_selection", 0.0, "skipped=no_dryrun_report")
         return
     with open(path) as f:
         report = json.load(f)
     service = service_from_dryrun_report(report, TpuPriceModel())
     if not len(service.store) or not len(service.catalog):
-        print("tpu_selection,0.0,skipped=empty_report")
+        emit("tpu_selection", 0.0, "skipped=empty_report")
         return
     pick, us = _timed(lambda: service.submit("decode_32k"))
-    print(f"tpu_selection,{us:.1f},decode_pick={pick.config_id};"
-          f"records={len(service.store)};cached={pick.from_cache}")
+    emit("tpu_selection", us,
+         f"decode_pick={pick.config_id};records={len(service.store)};"
+         f"cached={pick.from_cache}")
 
 
 def bench_rank_vectorized_vs_dict():
@@ -117,10 +127,10 @@ def bench_rank_vectorized_vs_dict():
     import rank_bench
     for n_jobs, n_cfgs in ((50, 20), (200, 50)):
         r = rank_bench.compare(n_jobs, n_cfgs, repeat=10)
-        print(f"rank_vectorized_{n_jobs}x{n_cfgs},{r['us_numpy']:.1f},"
-              f"cells={r['cells']};dict_loop_us={r['us_dict']:.1f};"
-              f"speedup={r['speedup']:.1f}x;"
-              f"vectorized_wins={r['us_numpy'] < r['us_dict']}")
+        emit(f"rank_vectorized_{n_jobs}x{n_cfgs}", r["us_numpy"],
+             f"cells={r['cells']};dict_loop_us={r['us_dict']:.1f};"
+             f"speedup={r['speedup']:.1f}x;"
+             f"vectorized_wins={r['us_numpy'] < r['us_dict']}")
 
 
 def main() -> None:
@@ -136,6 +146,7 @@ def main() -> None:
     bench_selection_overhead(trace, price)
     bench_tpu_selection()
     bench_rank_vectorized_vs_dict()
+    write_json()
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -1,0 +1,91 @@
+"""Live price market end-to-end: feed -> ticker -> daemon -> migration.
+
+    PYTHONPATH=src python examples/live_market.py --events 400 --seed 3
+
+A TPU mesh universe is wrapped in a mutable
+:class:`repro.selector.PriceTable`; a deterministic
+:class:`repro.market.SimulatedSpotFeed` (mean-reverting spot walks plus a
+scheduled v5p discount window) streams price deltas into the
+:class:`repro.market.SelectionDaemon`, which serves an interleaved
+submission/tick stream, repricing cached rankings incrementally
+(DESIGN.md §6).  At the end, the hysteresis migration advisor decides
+whether a decode fleet placed at tick 0 should move under final prices.
+"""
+import argparse
+
+from repro.core.costmodel import TpuPriceModel
+from repro.core.tpu_flora import MeshOption, WorkloadRecord, make_service
+from repro.market import (MarketEvent, SelectionDaemon, SimulatedSpotFeed,
+                          should_migrate, synthetic_stream)
+from repro.selector import PriceTable
+
+
+def build_service():
+    options = [
+        MeshOption("v5e-dp256xtp1", "v5e", 256, (256, 1), ("data", "model")),
+        MeshOption("v5e-dp16xtp16", "v5e", 256, (16, 16), ("data", "model")),
+        MeshOption("v5p-dp16xtp16", "v5p", 256, (16, 16), ("data", "model")),
+        MeshOption("v5p-dp64xtp4", "v5p", 256, (64, 4), ("data", "model")),
+    ]
+    speed = {"v5e-dp256xtp1": {"train_4k": 1.0, "decode_32k": 4.0},
+             "v5e-dp16xtp16": {"train_4k": 1.5, "decode_32k": 1.0},
+             "v5p-dp16xtp16": {"train_4k": 0.8, "decode_32k": 0.55},
+             "v5p-dp64xtp4": {"train_4k": 0.7, "decode_32k": 0.9}}
+    records = [WorkloadRecord(arch=a, shape=s, mesh=m, step_seconds=v)
+               for a in ("lm-7b", "moe-30b")
+               for m, shapes in speed.items()
+               for s, v in shapes.items()]
+    service = make_service(options, records, TpuPriceModel("spot"))
+    # swap the model source for a live quote table (same starting prices)
+    service.set_price_source(PriceTable.from_catalog(
+        service.catalog, TpuPriceModel("spot")))
+    return service
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=3)
+    args = ap.parse_args()
+
+    service = build_service()
+    feed = SimulatedSpotFeed(
+        dict(service.price_source.items()), seed=args.seed,
+        change_fraction=0.08, volatility=0.10,
+        events=[MarketEvent("europe-west3", start_tick=10, duration=25,
+                            factor=0.5, kind="discount")])
+    daemon = SelectionDaemon(service, feed)
+
+    initial = service.submit("decode_32k")
+    print(f"t=0 decode fleet placed on {initial.config_id} "
+          f"at {initial.hourly_cost:.0f} $/h (epoch {initial.price_epoch})")
+
+    stats = daemon.run(synthetic_stream(
+        ["decode_32k", "train_4k"], args.events, seed=args.seed,
+        tick_fraction=0.2))
+    svc = daemon.service
+    print(f"\nafter {stats.events} events: {stats.decisions} decisions, "
+          f"{stats.ticks} ticks, {stats.epochs} price epochs, "
+          f"{stats.deltas} deltas")
+    print(f"cache: {svc.cache_hits} hits / {svc.cache_misses} misses, "
+          f"{svc.reprice_refreshes} incremental refreshes "
+          f"(epoch now {svc.price_epoch})")
+
+    final = service.submit("decode_32k")
+    print(f"\ncurrent winner under live prices: {final.config_id} "
+          f"at {final.hourly_cost:.0f} $/h")
+    advice = should_migrate(initial, final.ranking, switch_cost_hours=0.5,
+                            horizon_hours=24.0)
+    verb = "MIGRATE" if advice.migrate else "STAY"
+    print(f"fleet advisor: {verb} ({advice.reason})")
+    if advice.migrate:
+        print(f"  net saving over {advice.horizon_hours:g} h: "
+              f"{advice.net_saving_usd:.2f} USD")
+
+    journal = daemon.journal_dump().splitlines()
+    print(f"\njournal: {len(journal) - 1} records "
+          f"(header: {journal[0][:60]}...)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""The live price market: streaming feeds, repricing, continuous selection.
+
+The paper applies *current* hourly costs at selection time (§II-D); this
+package makes "current" a live property instead of a one-shot argument
+(DESIGN.md §6).  Data flow:
+
+  feed      -- :class:`PriceFeed` / :class:`SimulatedSpotFeed`: a
+               deterministic spot market emitting :class:`PriceDelta`
+               batches per tick (seeded mean-reverting walks, regional
+               multipliers, scheduled discount/eviction events);
+  ticker    -- :class:`PriceTicker`: applies each batch to the service's
+               :class:`~repro.selector.PriceTable` and drives price
+               epochs through ``SelectionService.reprice`` (the
+               incremental :class:`~repro.selector.RankState` path);
+  daemon    -- :class:`SelectionDaemon`: consumes an interleaved stream
+               of submissions and price ticks, amortizes same-class
+               submissions through the ranking cache, and journals every
+               :class:`~repro.selector.Decision` to versioned JSONL;
+  migration -- :func:`should_migrate`: hysteresis advisor so a running
+               fleet only moves when projected savings beat the switch
+               cost (wired into ``serve.engine.plan_decode_placement``).
+"""
+from repro.market.daemon import (DaemonStats, SelectionDaemon, Submission,
+                                 Tick, synthetic_stream)
+from repro.market.feed import (MarketEvent, PriceDelta, PriceFeed,
+                               SimulatedSpotFeed)
+from repro.market.migration import MigrationAdvice, should_migrate
+from repro.market.ticker import PriceTicker
+
+__all__ = [
+    "DaemonStats", "MarketEvent", "MigrationAdvice", "PriceDelta",
+    "PriceFeed", "PriceTicker", "SelectionDaemon", "SimulatedSpotFeed",
+    "Submission", "Tick", "should_migrate", "synthetic_stream",
+]

@@ -1,0 +1,175 @@
+"""SelectionDaemon: continuous selection over an interleaved event stream.
+
+The production shape of the selector (ROADMAP north star): submissions
+and price ticks arrive interleaved; the daemon routes each submission
+through ``SelectionService.submit`` — same-class submissions between two
+ticks are amortized into one ranking by the service's cache, and each
+tick refreshes rankings incrementally instead of recomputing — and
+journals every :class:`~repro.selector.Decision` to versioned JSONL
+(header line + one record per event, mirroring ``ProfilingStore``'s
+schema).  Everything downstream of the seed is deterministic: the same
+event stream against the same universe yields a byte-identical journal,
+which is the reproducibility bar the benchmarks enforce.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import (Any, Dict, Hashable, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple, Union)
+
+from repro.core.trace import JobClass
+from repro.selector import Decision, SelectionService
+from repro.market.feed import PriceFeed
+from repro.market.ticker import PriceTicker
+
+JOURNAL_FORMAT = "repro.market.decision-journal"
+JOURNAL_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Submission:
+    """A job submission event in the daemon stream."""
+
+    job_id: Hashable
+    annotation: Optional[JobClass] = None
+    exclude_groups: Optional[Tuple[str, ...]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Tick:
+    """A price-tick event: poll the feed once."""
+
+
+Event = Union[Submission, Tick]
+
+
+@dataclasses.dataclass
+class DaemonStats:
+    events: int = 0
+    submissions: int = 0
+    decisions: int = 0
+    rejected: int = 0           # submissions with nothing rankable
+    ticks: int = 0
+    deltas: int = 0
+    epochs: int = 0
+
+
+class SelectionDaemon:
+    """Consume events, decide, journal.  One instance = one journal."""
+
+    def __init__(self, service: SelectionService, feed: PriceFeed):
+        self.service = service
+        self.ticker = PriceTicker(feed, service)
+        self.stats = DaemonStats()
+        self._journal: List[str] = [json.dumps({
+            "format": JOURNAL_FORMAT, "version": JOURNAL_VERSION,
+            "catalog": list(service.catalog.ids())})]
+        self._seq = 0
+
+    # -- event handling ------------------------------------------------------
+    def handle(self, event: Event) -> Optional[Decision]:
+        """Process one event; returns the Decision for submissions."""
+        self.stats.events += 1
+        if isinstance(event, Tick):
+            deltas = self.ticker.tick()
+            self.stats.ticks += 1
+            self.stats.deltas += len(deltas)
+            if deltas:
+                self.stats.epochs += 1
+                self._record({
+                    "kind": "tick", "seq": self._next_seq(),
+                    "deltas": len(deltas),
+                    "price_epoch": self.service.price_epoch})
+            return None
+        self.stats.submissions += 1
+        try:
+            decision = self.service.submit(
+                event.job_id, annotation=event.annotation,
+                exclude_groups=event.exclude_groups)
+        except ValueError:
+            # nothing rankable for this submission (empty class, id
+            # mismatch): journal the rejection, keep serving
+            self.stats.rejected += 1
+            self._record({"kind": "rejected", "seq": self._next_seq(),
+                          "job": event.job_id,
+                          "price_epoch": self.service.price_epoch})
+            return None
+        self.stats.decisions += 1
+        self._record({
+            "kind": "decision", "seq": self._next_seq(),
+            "job": decision.job_id,
+            "job_class": (decision.job_class.value
+                          if decision.job_class else None),
+            "config": decision.config_id,
+            "hourly_cost": decision.hourly_cost,
+            "from_cache": decision.from_cache,
+            "price_epoch": decision.price_epoch,
+        })
+        return decision
+
+    def run(self, events: Iterable[Event]) -> DaemonStats:
+        for event in events:
+            self.handle(event)
+        return self.stats
+
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def _record(self, rec: Dict[str, Any]) -> None:
+        self._journal.append(json.dumps(rec))
+
+    # -- versioned JSONL journal ---------------------------------------------
+    def journal_dump(self) -> str:
+        return "\n".join(self._journal) + "\n"
+
+    def save_journal(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.journal_dump())
+
+    @staticmethod
+    def loads_journal(text: str) -> Tuple[Dict[str, Any],
+                                          List[Dict[str, Any]]]:
+        """Parse a journal: (header, records).  Rejects foreign formats."""
+        lines = [ln for ln in text.splitlines() if ln.strip()]
+        if not lines:
+            raise ValueError("empty decision journal")
+        header = json.loads(lines[0])
+        if header.get("format") != JOURNAL_FORMAT:
+            raise ValueError(f"not a decision journal: {header!r}")
+        if header.get("version") != JOURNAL_VERSION:
+            raise ValueError(
+                f"unsupported journal version {header.get('version')!r}")
+        return header, [json.loads(ln) for ln in lines[1:]]
+
+    @classmethod
+    def load_journal(cls, path: str) -> Tuple[Dict[str, Any],
+                                              List[Dict[str, Any]]]:
+        with open(path) as f:
+            return cls.loads_journal(f.read())
+
+
+def synthetic_stream(job_ids: Sequence[Hashable], n_events: int, *,
+                     seed: int = 0, tick_fraction: float = 0.1
+                     ) -> Iterator[Event]:
+    """A deterministic interleaved submission/tick stream.
+
+    Event kinds and job picks are hash-seeded (same discipline as
+    :class:`SimulatedSpotFeed`), so ``(job_ids, n_events, seed)`` fully
+    determines the stream — the determinism bar for daemon benchmarks.
+    """
+    if not job_ids:
+        raise ValueError("no job ids to submit")
+    import hashlib
+
+    def _u(*key: object) -> float:
+        raw = "|".join(str(k) for k in (seed,) + key).encode()
+        return (int.from_bytes(hashlib.md5(raw).digest()[:8], "big") + 1) \
+            / (2 ** 64 + 2)
+
+    for i in range(n_events):
+        if _u("kind", i) < tick_fraction:
+            yield Tick()
+        else:
+            yield Submission(job_ids[int(_u("job", i) * len(job_ids))])

@@ -1,0 +1,51 @@
+"""PriceTicker: the loop that turns a feed into service price epochs.
+
+One tick = one ``feed.poll`` batch pushed through
+``SelectionService.reprice``: the service applies the deltas to its
+:class:`~repro.selector.PriceTable` (the single source of truth for cold
+recomputes), bumps the price epoch, and refreshes every live ranking
+through the incremental :class:`~repro.selector.RankState` path
+(DESIGN.md §6).  An empty batch is a no-op — no epoch bump, caches stay
+hot — so quiet markets cost nothing.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, Tuple
+
+from repro.selector import PriceTable, SelectionService
+from repro.market.feed import PriceDelta, PriceFeed
+
+
+class PriceTicker:
+    """Applies feed batches to a service's live price table."""
+
+    def __init__(self, feed: PriceFeed, service: SelectionService):
+        if not isinstance(service.price_source, PriceTable):
+            raise ValueError(
+                "PriceTicker needs a service with a PriceTable price "
+                "source (use PriceTable.from_catalog to snapshot one)")
+        self.feed = feed
+        self.service = service
+        #: next tick index handed to ``feed.poll``.
+        self.tick_count = 0
+        self.deltas_applied = 0
+        self.epochs_driven = 0
+
+    def tick(self) -> Tuple[PriceDelta, ...]:
+        """Poll one batch and apply it; returns the batch."""
+        deltas = self.feed.poll(self.tick_count)
+        self.tick_count += 1
+        if deltas:
+            table: Dict[Hashable, float] = {d.config_id: d.price
+                                            for d in deltas}
+            self.service.reprice(table)
+            self.deltas_applied += len(deltas)
+            self.epochs_driven += 1
+        return deltas
+
+    def run(self, ticks: int) -> int:
+        """Drive ``ticks`` ticks; returns total deltas applied."""
+        applied = 0
+        for _ in range(ticks):
+            applied += len(self.tick())
+        return applied

@@ -12,22 +12,30 @@ trace is substrate-agnostic (§II) — is realised as four layers:
               versioned JSONL persistence;
   rank     -- :func:`rank_dense`: the vectorized normalized-cost ranking
               (runtime matrix x price vector, row-normalize, column-sum);
+              :class:`RankState` keeps the intermediates alive for
+              incremental repricing under streaming price deltas;
   service  -- :class:`SelectionService`: ``submit(job, annotation) ->
-              Decision`` with per-(class, price-epoch) ranking caches.
+              Decision`` with per-(class, price-epoch) ranking caches and
+              ``reprice(deltas)`` for live :class:`PriceTable` sources.
+
+The live-market layer on top of this package — streaming price feeds,
+the tick loop, the continuous selection daemon and the migration advisor
+— lives in :mod:`repro.market` (DESIGN.md §6).
 
 The legacy entry points (:class:`repro.core.flora.Flora`,
 :class:`repro.core.tpu_flora.TpuFlora`) remain as thin adapters over this
 package; new substrates should implement :class:`ResourceCatalog` directly.
 See DESIGN.md for the full architecture.
 """
-from repro.selector.catalog import (BaseCatalog, GcpVmCatalog,
+from repro.selector.catalog import (BaseCatalog, GcpVmCatalog, PriceTable,
                                     ResourceCatalog, TpuSliceCatalog)
-from repro.selector.rank import RankedConfig, rank_dense, rank_pairs
+from repro.selector.rank import (RankedConfig, RankState, rank_dense,
+                                 rank_pairs)
 from repro.selector.store import ProfilingStore
 from repro.selector.service import Decision, SelectionService
 
 __all__ = [
-    "BaseCatalog", "Decision", "GcpVmCatalog", "ProfilingStore",
-    "RankedConfig", "ResourceCatalog", "SelectionService", "TpuSliceCatalog",
-    "rank_dense", "rank_pairs",
+    "BaseCatalog", "Decision", "GcpVmCatalog", "PriceTable",
+    "ProfilingStore", "RankState", "RankedConfig", "ResourceCatalog",
+    "SelectionService", "TpuSliceCatalog", "rank_dense", "rank_pairs",
 ]

@@ -16,13 +16,75 @@ spot markets, on-prem partitions.
 """
 from __future__ import annotations
 
-from typing import (Any, Hashable, List, Mapping, Optional, Protocol,
-                    Sequence, runtime_checkable)
+from typing import (Any, Dict, Hashable, Iterable, Iterator, List, Mapping,
+                    Optional, Protocol, Sequence, Tuple, runtime_checkable)
 
 import numpy as np
 
 from repro.core.costmodel import LinearPriceModel, TpuPriceModel
 from repro.core.trace import CloudConfig
+
+
+class PriceTable:
+    """Mutable per-entry $/h quotes — the live-market price source.
+
+    Model-based sources (:class:`LinearPriceModel`, :class:`TpuPriceModel`)
+    derive an entry's price from its resources; a ``PriceTable`` instead
+    holds one *current* quote per entry id, so a streaming market feed can
+    move a single spot price without touching the rest of the universe
+    (DESIGN.md §6).  Every :class:`BaseCatalog` resolves it transparently
+    via :meth:`BaseCatalog.hourly_cost`.
+
+    Mutation goes through :meth:`apply` (absolute re-quotes, never
+    relative), which bumps :attr:`version`.  ``SelectionService`` keys
+    its ranking caches on that version, so quotes applied directly to a
+    service-owned table are never masked by a stale cached ranking —
+    they force a cold recompute; routing them through
+    ``SelectionService.reprice`` instead gets the incremental path.
+    """
+
+    def __init__(self, prices: Mapping[Hashable, float]):
+        self._prices: Dict[Hashable, float] = {}
+        #: bumped on every :meth:`apply` (consumers key caches on it).
+        self.version = 0
+        self._validate_and_set(prices.items())
+
+    @classmethod
+    def from_catalog(cls, catalog: "BaseCatalog",
+                     price_source: Optional[Any] = None) -> "PriceTable":
+        """Snapshot a catalog's current prices as the mutable base quotes."""
+        return cls({e: catalog.hourly_cost(e, price_source)
+                    for e in catalog.ids()})
+
+    def _validate_and_set(self,
+                          items: Iterable[Tuple[Hashable, float]]) -> None:
+        for entry_id, price in items:
+            if not price > 0:
+                raise ValueError(
+                    f"non-positive price {price!r} for {entry_id!r}")
+            self._prices[entry_id] = float(price)
+
+    def apply(self, deltas: Mapping[Hashable, float]) -> None:
+        """Apply absolute re-quotes ``{entry_id: new $/h}``; one epoch."""
+        if not deltas:
+            return
+        self._validate_and_set(deltas.items())
+        self.version += 1
+
+    def __getitem__(self, entry_id: Hashable) -> float:
+        return self._prices[entry_id]
+
+    def __contains__(self, entry_id: Hashable) -> bool:
+        return entry_id in self._prices
+
+    def __len__(self) -> int:
+        return len(self._prices)
+
+    def __iter__(self) -> Iterator[Hashable]:
+        return iter(self._prices)
+
+    def items(self) -> Iterable[Tuple[Hashable, float]]:
+        return self._prices.items()
 
 
 @runtime_checkable
@@ -84,6 +146,16 @@ class BaseCatalog:
         return np.asarray([self.hourly_cost(e, src) for e in self._ids],
                           dtype=np.float64)
 
+    def hourly_cost(self, entry_id: Hashable,
+                    price_source: Optional[Any] = None) -> float:
+        """Current $/h: a :class:`PriceTable` source is resolved directly
+        (live-market quotes); anything else goes through the substrate's
+        :meth:`_entry_cost` model."""
+        src = self._price(price_source)
+        if isinstance(src, PriceTable):
+            return src[entry_id]
+        return self._entry_cost(entry_id, src)
+
     # subclass responsibility
     def entry(self, entry_id: Hashable) -> Any:
         raise NotImplementedError
@@ -91,8 +163,8 @@ class BaseCatalog:
     def describe(self, entry_id: Hashable) -> Mapping[str, float]:
         raise NotImplementedError
 
-    def hourly_cost(self, entry_id: Hashable,
-                    price_source: Optional[Any] = None) -> float:
+    def _entry_cost(self, entry_id: Hashable, price_source: Any) -> float:
+        """Model-based $/h for ``entry_id`` under a resolved source."""
         raise NotImplementedError
 
 
@@ -114,9 +186,9 @@ class GcpVmCatalog(BaseCatalog):
                 "mem_gib": float(c.total_mem_gib),
                 "nodes": float(c.scale_out)}
 
-    def hourly_cost(self, entry_id: Hashable,
-                    price_source: Optional[LinearPriceModel] = None) -> float:
-        return self._price(price_source)(self._configs[entry_id])
+    def _entry_cost(self, entry_id: Hashable,
+                    price_source: LinearPriceModel) -> float:
+        return price_source(self._configs[entry_id])
 
 
 class TpuSliceCatalog(BaseCatalog):
@@ -139,6 +211,6 @@ class TpuSliceCatalog(BaseCatalog):
         o = self._options[entry_id]
         return {"chips": float(o.chips)}
 
-    def hourly_cost(self, entry_id: Hashable,
-                    price_source: Optional[TpuPriceModel] = None) -> float:
-        return self._options[entry_id].hourly_cost(self._price(price_source))
+    def _entry_cost(self, entry_id: Hashable,
+                    price_source: TpuPriceModel) -> float:
+        return self._options[entry_id].hourly_cost(price_source)

@@ -51,6 +51,21 @@ def _scores_numpy(hours: np.ndarray, mask: np.ndarray, prices: np.ndarray
     return norm.sum(axis=0), mask.sum(axis=0)
 
 
+def _materialize(scores: np.ndarray, counts: np.ndarray,
+                 config_ids: Sequence[Hashable]) -> List[RankedConfig]:
+    """Scores/counts -> sorted RankedConfig list (shared by the cold and
+    incremental paths so their rankings are identical by construction)."""
+    ranked = [
+        RankedConfig(
+            c,
+            float(scores[i]) if counts[i] else float("inf"),
+            float(scores[i] / counts[i]) if counts[i] else float("inf"))
+        for i, c in enumerate(config_ids)]
+    order = {c: i for i, c in enumerate(config_ids)}
+    ranked.sort(key=lambda r: (r.score, order[r.config_id]))
+    return ranked
+
+
 if _HAVE_JAX:
     @jax.jit
     def _scores_jax(hours, mask, prices):
@@ -92,15 +107,7 @@ def rank_dense(hours: np.ndarray, mask: np.ndarray, prices: np.ndarray,
         scores, counts = _scores_numpy(hours, mask, prices)
     else:
         raise ValueError(f"unknown backend {backend!r}")
-    ranked = [
-        RankedConfig(
-            c,
-            float(scores[i]) if counts[i] else float("inf"),
-            float(scores[i] / counts[i]) if counts[i] else float("inf"))
-        for i, c in enumerate(config_ids)]
-    order = {c: i for i, c in enumerate(config_ids)}
-    ranked.sort(key=lambda r: (r.score, order[r.config_id]))
-    return ranked
+    return _materialize(scores, counts, config_ids)
 
 
 def rank_pairs(
@@ -129,3 +136,134 @@ def rank_pairs(
     prices = np.asarray([price_of(c) for c in config_ids], dtype=np.float64)
     return rank_dense(hours, mask, prices, config_ids, job_ids=list(jobs),
                       backend=backend)
+
+
+class RankState:
+    """Incremental repricing over a fixed (job x config) runtime matrix.
+
+    The live-market path (DESIGN.md §6): when only k of C prices move in a
+    tick, a full :func:`rank_dense` recomputes every intermediate from
+    scratch — cost broadcast, row-min, normalize, sum, plus building and
+    sorting C ``RankedConfig`` objects.  ``RankState`` instead keeps the
+    dense intermediates (cost, row-min, normalized-cost matrices) alive and
+    on :meth:`reprice` touches only
+
+      * the k changed cost/norm columns, and
+      * the rows whose masked row-minimum was or becomes a changed column
+        (every cell of those rows renormalizes).
+
+    **Bit-identity contract**: scores after any ``reprice`` sequence are
+    bit-identical to a cold ``rank_dense`` at the same prices.  Updated
+    cells are recomputed with the exact elementwise arithmetic of the cold
+    path, and scores are reduced with the same full ``norm.sum(axis=0)``
+    (numpy's pairwise summation is *not* decomposable, so per-column delta
+    updates would drift by ulps — the one full pass over the norm matrix is
+    the price of exactness, and it is still ~100x cheaper than the cold
+    path at 10k configs; see ``benchmarks/market_bench.py``).
+
+    numpy/float64 only — the jax backend's float32 kernel has no exact
+    incremental counterpart.
+    """
+
+    def __init__(self, hours: np.ndarray, mask: np.ndarray,
+                 prices: np.ndarray, config_ids: Sequence[Hashable],
+                 job_ids: Optional[Sequence[Hashable]] = None):
+        self.hours = np.asarray(hours, dtype=np.float64)
+        self.mask = np.asarray(mask, dtype=bool)
+        self.prices = np.array(prices, dtype=np.float64)
+        self.config_ids = list(config_ids)
+        self.job_ids = list(job_ids) if job_ids is not None else None
+        if self.hours.shape != self.mask.shape or \
+                self.hours.shape[1] != self.prices.shape[0]:
+            raise ValueError(f"shape mismatch: hours {self.hours.shape}, "
+                             f"mask {self.mask.shape}, "
+                             f"prices {self.prices.shape}")
+        if self.hours.shape[0] == 0:
+            raise ValueError("no test jobs to learn from")
+        self._pos = {c: i for i, c in enumerate(self.config_ids)}
+        if len(self._pos) != len(self.config_ids):
+            raise ValueError("duplicate config ids")
+        self._check_positive(self.mask, self.hours * self.prices[None, :])
+        #: ticks applied since construction (diagnostics, cache keys).
+        self.reprices = 0
+        self._rebuild()
+
+    def _check_positive(self, mask: np.ndarray, cost: np.ndarray) -> None:
+        bad = mask & ~(cost > 0)
+        if bad.any():
+            row = int(np.argwhere(bad)[0][0])
+            job = self.job_ids[row] if self.job_ids is not None else row
+            raise ValueError(f"non-positive cost for job {job!r}")
+
+    def _rebuild(self) -> None:
+        # the cold-path arithmetic, verbatim (bit-identity anchor)
+        self.cost = np.where(self.mask, self.hours * self.prices[None, :],
+                             np.inf)
+        self.row_best = np.min(self.cost, axis=1, initial=np.inf)
+        with np.errstate(invalid="ignore"):
+            self.norm = np.where(self.mask,
+                                 self.cost / self.row_best[:, None], 0.0)
+        self.scores = self.norm.sum(axis=0)
+        self.counts = self.mask.sum(axis=0)
+
+    def reprice(self, deltas: Union[Mapping[Hashable, float],
+                                    Sequence[Tuple[Hashable, float]]]) -> int:
+        """Apply ``{config_id: new $/h}`` deltas; returns #rows whose
+        masked row-minimum moved (the expensive case)."""
+        table = deltas if isinstance(deltas, Mapping) else dict(deltas)
+        if not table:
+            return 0
+        try:
+            cols = np.asarray([self._pos[c] for c in table], dtype=np.intp)
+        except KeyError as e:
+            raise ValueError(f"unknown config id in deltas: {e.args[0]!r}")
+        new_prices = np.asarray(list(table.values()), dtype=np.float64)
+        # same elementwise ops as the cold broadcast -> bit-identical cells
+        new_cost = np.where(self.mask[:, cols],
+                            self.hours[:, cols] * new_prices[None, :],
+                            np.inf)
+        self._check_positive(self.mask[:, cols], new_cost)
+        old_cost = self.cost[:, cols]
+        self.prices[cols] = new_prices
+        self.cost[:, cols] = new_cost
+        # rows whose masked minimum was in a changed column, or where a
+        # changed column undercuts the old minimum, need a fresh row-min
+        was_min = old_cost.min(axis=1, initial=np.inf) == self.row_best
+        undercut = new_cost.min(axis=1, initial=np.inf) < self.row_best
+        candidates = np.flatnonzero(was_min | undercut)
+        moved = np.array([], dtype=np.intp)
+        if candidates.size:
+            fresh = np.min(self.cost[candidates, :], axis=1, initial=np.inf)
+            changed = fresh != self.row_best[candidates]
+            moved = candidates[changed]
+            self.row_best[moved] = fresh[changed]
+        with np.errstate(invalid="ignore"):
+            self.norm[:, cols] = np.where(
+                self.mask[:, cols],
+                self.cost[:, cols] / self.row_best[:, None], 0.0)
+            if moved.size:
+                self.norm[moved, :] = np.where(
+                    self.mask[moved, :],
+                    self.cost[moved, :] / self.row_best[moved, None], 0.0)
+        # full-matrix reduction, identical to the cold path (see docstring)
+        self.scores = self.norm.sum(axis=0)
+        self.reprices += 1
+        return int(moved.size)
+
+    def ranking(self) -> List[RankedConfig]:
+        """The full sorted ranking (bit-identical to ``rank_dense``)."""
+        return _materialize(self.scores, self.counts, self.config_ids)
+
+    def winner(self) -> RankedConfig:
+        """argmin only — O(C), no list build/sort (the daemon hot path)."""
+        finite = self.counts > 0
+        if not finite.any():
+            i = 0
+        else:
+            masked = np.where(finite, self.scores, np.inf)
+            i = int(np.argmin(masked))
+        c = self.config_ids[i]
+        s = float(self.scores[i]) if self.counts[i] else float("inf")
+        m = float(self.scores[i] / self.counts[i]) if self.counts[i] \
+            else float("inf")
+        return RankedConfig(c, s, m)

@@ -6,6 +6,11 @@ math itself:
   * **price epochs** — prices change while the trace does not (§II-D);
     swapping the price source bumps an epoch counter and invalidates every
     cached ranking;
+  * **incremental repricing** — when the price source is a mutable
+    :class:`~repro.selector.catalog.PriceTable` driven by a market feed,
+    :meth:`reprice` applies per-config deltas to the live
+    :class:`~repro.selector.rank.RankState` of every cached ranking
+    instead of recomputing from scratch (DESIGN.md §6);
   * **ranking caches** — rankings depend only on (job class, exclusion
     set, price epoch), so repeat submissions of same-class jobs are O(1)
     dictionary hits (the serving-scale path: one ranking amortized over
@@ -17,12 +22,12 @@ math itself:
 from __future__ import annotations
 
 import dataclasses
-from typing import (Any, Callable, Dict, Hashable, Optional, Sequence,
-                    Tuple)
+from typing import (Any, Callable, Dict, Hashable, Mapping, Optional,
+                    Sequence, Tuple)
 
 from repro.core.trace import JobClass
-from repro.selector.catalog import BaseCatalog
-from repro.selector.rank import RankedConfig, rank_dense
+from repro.selector.catalog import BaseCatalog, PriceTable
+from repro.selector.rank import RankedConfig, RankState, rank_dense
 from repro.selector.store import ProfilingStore
 
 
@@ -55,8 +60,16 @@ class SelectionService:
         self._price_source = price_source
         self._price_epoch = 0
         self._cache: Dict[Tuple, Tuple[RankedConfig, ...]] = {}
+        #: live incremental states, keyed like the cache but without the
+        #: price tag — a reprice mutates them in place across epochs.
+        self._states: Dict[Tuple, RankState] = {}
+        #: price tag each state was last (re)priced under; a state is only
+        #: served when its tag matches the current one.
+        self._state_tags: Dict[Tuple, Tuple] = {}
         self.cache_hits = 0
         self.cache_misses = 0
+        #: rankings refreshed via the incremental path (not full recomputes).
+        self.reprice_refreshes = 0
 
     # -- price management ---------------------------------------------------
     @property
@@ -76,18 +89,89 @@ class SelectionService:
         """Bump the price epoch (e.g. the same mutable source re-quoted)."""
         self._price_epoch += 1
         self._cache.clear()
+        self._states.clear()
+        self._state_tags.clear()
+
+    def _price_tag(self) -> Tuple:
+        """What cached rankings are keyed on: the epoch, plus the table
+        version for :class:`PriceTable` sources — so quotes applied to
+        the table *outside* :meth:`reprice` can never serve a stale
+        cached ranking (they force a cold recompute instead)."""
+        src = self._price_source
+        return (self._price_epoch,
+                src.version if isinstance(src, PriceTable) else None)
+
+    def reprice(self, deltas: Mapping[Hashable, float]) -> int:
+        """Apply ``{config_id: new $/h}`` quotes incrementally.
+
+        Requires the price source to be a :class:`PriceTable` (the table
+        is the single source of truth for cold recomputes; applying deltas
+        anywhere else would let an incremental ranking and a later cold
+        ranking disagree within one epoch).  Delta ids are validated
+        against the catalog *before* the table mutates, so a bad batch
+        cannot desync live states from the table.  The table is updated,
+        the epoch bumps, and every live :class:`RankState` is repriced in
+        place; refreshed rankings materialize lazily on the next
+        ``rank``/``submit`` (building and sorting the ranking list costs
+        more than the incremental update itself at 10k configs — no point
+        paying it per tick for classes nobody submits).  Returns the
+        number of states repriced incrementally.
+        """
+        if not isinstance(self._price_source, PriceTable):
+            raise ValueError(
+                "reprice requires a PriceTable price source; use "
+                "set_price_source/invalidate_prices for model sources")
+        deltas = dict(deltas)
+        if not deltas:
+            return 0
+        unknown = [c for c in deltas if c not in self.catalog]
+        if unknown:
+            raise ValueError(
+                f"unknown config ids in price deltas: {unknown[:3]!r}")
+        self._price_source.apply(deltas)
+        self._price_epoch += 1
+        self._cache.clear()
+        tag = self._price_tag()
+        refreshed = 0
+        for key, state in list(self._states.items()):
+            store_version = key[0]
+            if store_version != self.store.version:
+                del self._states[key]       # stale trace: drop, rebuild cold
+                self._state_tags.pop(key, None)
+                continue
+            state.reprice(deltas)
+            self._state_tags[key] = tag
+            refreshed += 1
+        self.reprice_refreshes += refreshed
+        return refreshed
 
     # -- ranking (cached) ----------------------------------------------------
-    def rank(self, job_class: Optional[JobClass] = None,
-             exclude_groups: Sequence[str] = ()
-             ) -> Tuple[RankedConfig, ...]:
-        """Rank the whole catalog for a class (``None`` = all classes)."""
-        key = (self._price_epoch, self.store.version, job_class,
-               tuple(sorted(exclude_groups)))
+    def rank_cached(self, job_class: Optional[JobClass] = None,
+                    exclude_groups: Sequence[str] = ()
+                    ) -> Tuple[Tuple[RankedConfig, ...], bool]:
+        """Rank the catalog for a class; returns ``(ranking, from_cache)``.
+
+        The hit/miss fact is returned explicitly (not inferred from
+        counter deltas, which misreport under reentrant or concurrent
+        ``rank`` calls).  ``from_cache`` is also True when the ranking
+        materializes from a live, already-repriced :class:`RankState`
+        (the incremental path: no ranking recompute happened).
+        """
+        base_key = (self.store.version, job_class,
+                    tuple(sorted(exclude_groups)))
+        tag = self._price_tag()
+        key = tag + base_key
         hit = self._cache.get(key)
         if hit is not None:
             self.cache_hits += 1
-            return hit
+            return hit, True
+        state = self._states.get(base_key)
+        if state is not None and self._state_tags.get(base_key) == tag:
+            # repriced incrementally on the last tick; materialize lazily
+            ranking = tuple(state.ranking())
+            self._cache[key] = ranking
+            self.cache_hits += 1
+            return ranking, True
         self.cache_misses += 1
         jobs = self.store.select_jobs(job_class=job_class,
                                       exclude_groups=exclude_groups)
@@ -96,10 +180,28 @@ class SelectionService:
         config_ids = self.catalog.ids()
         hours, mask = self.store.matrix(job_ids=jobs, config_ids=config_ids)
         prices = self.catalog.price_vector(self._price_source)
-        ranking = tuple(rank_dense(hours, mask, prices, config_ids,
-                                   job_ids=jobs, backend=self.backend))
+        if self.backend == "numpy":
+            # build through RankState so later reprices are incremental;
+            # its arithmetic is the cold path verbatim (bit-identical).
+            for stale in [k for k in self._states
+                          if k[0] != self.store.version]:
+                del self._states[stale]
+                self._state_tags.pop(stale, None)
+            state = RankState(hours, mask, prices, config_ids, job_ids=jobs)
+            self._states[base_key] = state
+            self._state_tags[base_key] = tag
+            ranking = tuple(state.ranking())
+        else:
+            ranking = tuple(rank_dense(hours, mask, prices, config_ids,
+                                       job_ids=jobs, backend=self.backend))
         self._cache[key] = ranking
-        return ranking
+        return ranking, False
+
+    def rank(self, job_class: Optional[JobClass] = None,
+             exclude_groups: Sequence[str] = ()
+             ) -> Tuple[RankedConfig, ...]:
+        """Rank the whole catalog for a class (``None`` = all classes)."""
+        return self.rank_cached(job_class, exclude_groups)[0]
 
     # -- the paper pipeline for one submitted job -----------------------------
     def classify(self, job_id: Hashable,
@@ -129,9 +231,8 @@ class SelectionService:
                 own = self.store.meta(job_id).group
                 if own is not None:
                     exclude_groups = (own,)
-        before = self.cache_hits
-        ranking = self.rank(job_class=klass,
-                            exclude_groups=tuple(exclude_groups))
+        ranking, from_cache = self.rank_cached(
+            job_class=klass, exclude_groups=tuple(exclude_groups))
         winner = ranking[0]
         if winner.score == float("inf"):
             # every catalog entry is unprofiled for this selection
@@ -145,5 +246,5 @@ class SelectionService:
             entry=self.catalog.entry(winner.config_id),
             hourly_cost=self.catalog.hourly_cost(winner.config_id,
                                                  self._price_source),
-            ranking=ranking, from_cache=self.cache_hits > before,
+            ranking=ranking, from_cache=from_cache,
             price_epoch=self._price_epoch)

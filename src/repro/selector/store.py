@@ -55,6 +55,10 @@ class ProfilingStore:
         #: mutation counter; consumers (SelectionService) key caches on it
         #: so streamed-in cells invalidate stale rankings.
         self.version = 0
+        #: backing-array reallocations; rows and columns both grow by
+        #: amortized doubling, so this stays O(log rows + log cols) —
+        #: asserted by the growth test in tests/test_market.py.
+        self.realloc_count = 0
         for c in config_ids:
             self._add_config(c)
 
@@ -63,6 +67,7 @@ class ProfilingStore:
         new = np.full((max(rows, 1), max(cols, 1)), np.nan)
         r, c = self._hours.shape
         new[:r, :c] = self._hours
+        self.realloc_count += 1
         return new
 
     def _add_config(self, config_id: Hashable) -> int:

@@ -34,15 +34,40 @@ from repro.selector import Decision, SelectionService
 def plan_decode_placement(service: SelectionService,
                           shape_name: str = "decode_32k",
                           *, annotation=None,
-                          exclude_archs: Tuple[str, ...] = ()) -> Decision:
+                          exclude_archs: Tuple[str, ...] = (),
+                          current: Optional[Decision] = None,
+                          switch_cost_hours: float = 0.25,
+                          horizon_hours: float = 24.0,
+                          hysteresis: float = 1.25) -> Decision:
     """Pick the mesh for a decode fleet via the selection service.
 
     ``shape_name`` is the workload cell the fleet serves (class A,
     state-resident, unless annotated otherwise); the service ranks every
     profiled mesh option by summed normalized cost under current prices.
+
+    With ``current`` (the fleet's standing placement decision), the
+    hysteresis advisor (:func:`repro.market.should_migrate`, DESIGN.md
+    §6) gates the move: a running fleet only switches mesh when projected
+    savings over ``horizon_hours`` beat ``hysteresis`` times the
+    ``switch_cost_hours`` of dual-running during cutover.  When the
+    advisor says stay, the returned Decision keeps the current mesh but
+    is re-stamped with today's ranking, $/h and price epoch.
     """
-    return service.submit(shape_name, annotation=annotation,
-                          exclude_groups=exclude_archs)
+    decision = service.submit(shape_name, annotation=annotation,
+                              exclude_groups=exclude_archs)
+    if current is None or decision.config_id == current.config_id:
+        return decision
+    from repro.market.migration import should_migrate
+    advice = should_migrate(current, decision.ranking, switch_cost_hours,
+                            horizon_hours=horizon_hours,
+                            hysteresis=hysteresis)
+    if advice.migrate:
+        return decision
+    return dataclasses.replace(
+        decision, config_id=current.config_id,
+        entry=service.catalog.entry(current.config_id),
+        hourly_cost=service.catalog.hourly_cost(current.config_id,
+                                                service.price_source))
 
 
 @dataclasses.dataclass

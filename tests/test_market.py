@@ -1,0 +1,507 @@
+"""Tests for the live price market (repro.market + incremental repricing).
+
+Covers the ISSUE 2 acceptance surface: PriceTable price sources,
+RankState reprice bit-identity with the cold path, SelectionService
+streaming price-epoch semantics, feed/ticker/daemon determinism, journal
+round-trips, the hysteresis migration advisor, and the ProfilingStore
+growth guarantee.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import TpuPriceModel
+from repro.core.tpu_flora import MeshOption, WorkloadRecord, make_service
+from repro.core.trace import JobClass
+from repro.market import (MarketEvent, PriceDelta, PriceFeed, PriceTicker,
+                          SelectionDaemon, SimulatedSpotFeed, Submission,
+                          Tick, should_migrate, synthetic_stream)
+from repro.selector import (PriceTable, ProfilingStore, RankState,
+                            SelectionService, TpuSliceCatalog, rank_dense)
+
+
+# --- shared universe ------------------------------------------------------------
+
+MESH_OPTIONS = [
+    MeshOption("dp256xtp1", "v5e", 256, (256, 1), ("data", "model")),
+    MeshOption("dp16xtp16", "v5e", 256, (16, 16), ("data", "model")),
+    MeshOption("v5p-dp16xtp16", "v5p", 256, (16, 16), ("data", "model")),
+]
+SPEED = {"dp256xtp1": {"train_4k": 1.0, "decode_32k": 4.0},
+         "dp16xtp16": {"train_4k": 1.5, "decode_32k": 1.0},
+         "v5p-dp16xtp16": {"train_4k": 0.8, "decode_32k": 0.55}}
+
+
+def live_service() -> SelectionService:
+    recs = [WorkloadRecord(arch=a, shape=s, mesh=m, step_seconds=v)
+            for a in ("a1", "a2")
+            for m, shapes in SPEED.items() for s, v in shapes.items()]
+    svc = make_service(MESH_OPTIONS, recs, TpuPriceModel("ondemand"))
+    svc.set_price_source(PriceTable.from_catalog(svc.catalog,
+                                                 TpuPriceModel("ondemand")))
+    return svc
+
+
+def random_state(seed=0, n_jobs=20, n_cfgs=60):
+    rng = np.random.default_rng(seed)
+    hours = rng.uniform(0.05, 10.0, (n_jobs, n_cfgs))
+    mask = rng.random((n_jobs, n_cfgs)) > 0.25
+    mask[np.arange(n_jobs), rng.integers(0, n_cfgs, n_jobs)] = True
+    prices = rng.uniform(0.5, 20.0, n_cfgs)
+    ids = [f"c{i}" for i in range(n_cfgs)]
+    return hours, mask, prices, ids, rng
+
+
+# --- PriceTable -----------------------------------------------------------------
+
+def test_price_table_snapshots_catalog_and_overrides():
+    cat = TpuSliceCatalog(MESH_OPTIONS, TpuPriceModel("ondemand"))
+    table = PriceTable.from_catalog(cat)
+    assert table["dp256xtp1"] == pytest.approx(1.20 * 256)
+    # a table source short-circuits the per-entry price model
+    assert cat.hourly_cost("dp256xtp1", table) == table["dp256xtp1"]
+    table.apply({"dp256xtp1": 99.0})
+    assert table.version == 1
+    assert cat.hourly_cost("dp256xtp1", table) == 99.0
+    assert cat.price_vector(table)[0] == 99.0
+    # the model default is untouched
+    assert cat.hourly_cost("dp256xtp1") == pytest.approx(1.20 * 256)
+
+
+def test_price_table_rejects_nonpositive():
+    with pytest.raises(ValueError, match="non-positive"):
+        PriceTable({"a": 0.0})
+    table = PriceTable({"a": 1.0})
+    with pytest.raises(ValueError, match="non-positive"):
+        table.apply({"a": -2.0})
+    table.apply({})                         # no-op: no epoch
+    assert table.version == 0
+
+
+# --- RankState: incremental reprice bit-identity ---------------------------------
+
+def test_rank_state_build_matches_rank_dense():
+    hours, mask, prices, ids, _ = random_state()
+    state = RankState(hours, mask, prices, ids)
+    assert state.ranking() == rank_dense(hours, mask, prices, ids)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_reprice_bit_identical_to_cold_path(seed):
+    """Every tick of a delta stream yields rankings element-wise equal —
+    exact floats, not approx — to a cold rank_dense at the same prices."""
+    hours, mask, prices, ids, rng = random_state(seed)
+    state = RankState(hours, mask, prices, ids)
+    live = prices.copy()
+    for _ in range(30):
+        cols = rng.choice(len(ids), rng.integers(1, 6), replace=False)
+        deltas = {ids[c]: float(live[c] * rng.uniform(0.2, 4.0))
+                  for c in cols}
+        state.reprice(deltas)
+        for cid, p in deltas.items():
+            live[int(cid[1:])] = p
+        cold = rank_dense(hours, mask, live, ids)
+        assert state.ranking() == cold      # dataclass ==: ids AND scores
+
+
+def test_reprice_row_min_handoff():
+    """When a changed column was (or becomes) a row's masked minimum, the
+    whole row renormalizes; scores still match the cold path exactly."""
+    hours = np.array([[1.0, 2.0, 3.0], [5.0, 1.0, 1.5]])
+    mask = np.ones_like(hours, dtype=bool)
+    prices = np.array([1.0, 1.0, 1.0])
+    ids = ["a", "b", "c"]
+    state = RankState(hours, mask, prices, ids)
+    moved = state.reprice({"a": 10.0})      # column a loses row 0's min
+    assert moved == 1
+    assert state.ranking() == rank_dense(
+        hours, mask, np.array([10.0, 1.0, 1.0]), ids)
+    moved = state.reprice({"c": 0.1})       # column c takes both row mins
+    assert moved == 2
+    assert state.ranking() == rank_dense(
+        hours, mask, np.array([10.0, 1.0, 0.1]), ids)
+
+
+def test_reprice_validation():
+    hours, mask, prices, ids, _ = random_state(n_jobs=4, n_cfgs=6)
+    state = RankState(hours, mask, prices, ids)
+    with pytest.raises(ValueError, match="unknown config id"):
+        state.reprice({"nope": 1.0})
+    with pytest.raises(ValueError, match="non-positive cost"):
+        state.reprice({ids[0]: 0.0})
+    assert state.reprice({}) == 0
+    assert state.reprices == 0
+
+
+def test_rank_state_winner_matches_ranking():
+    hours, mask, prices, ids, rng = random_state(3)
+    state = RankState(hours, mask, prices, ids)
+    assert state.winner() == state.ranking()[0]
+    state.reprice({ids[0]: 0.01})
+    assert state.winner() == state.ranking()[0]
+
+
+# --- SelectionService.reprice: streaming price-epoch semantics -------------------
+
+def test_service_reprice_bumps_epoch_and_stays_cached():
+    svc = live_service()
+    d1 = svc.submit("decode_32k")
+    assert d1.config_id == "dp16xtp16" and not d1.from_cache
+    refreshed = svc.reprice({"dp256xtp1": 100.0})
+    assert refreshed == 1                   # one live class ranking
+    d2 = svc.submit("decode_32k")
+    assert d2.price_epoch == d1.price_epoch + 1
+    assert d2.from_cache                    # refreshed incrementally, no miss
+    assert svc.cache_misses == 1
+    assert svc.reprice_refreshes == 1
+
+
+def test_service_reprice_reroutes_like_cold_service():
+    """Incrementally repriced decisions equal a fresh service ranked cold
+    at the final prices — the streaming/cold consistency bar."""
+    svc = live_service()
+    svc.submit("decode_32k")
+    svc.submit("train_4k")
+    # v5p crashes to v5e spot rates over several ticks
+    for quote in (800.0, 500.0, 250.0):
+        svc.reprice({"v5p-dp16xtp16": quote})
+    hot_decode = svc.submit("decode_32k")
+    hot_train = svc.submit("train_4k")
+    assert hot_decode.from_cache and hot_train.from_cache
+    assert hot_decode.config_id == "v5p-dp16xtp16"
+
+    cold = live_service()
+    cold.price_source.apply({"v5p-dp16xtp16": 250.0})
+    cold.invalidate_prices()
+    for shape, hot in (("decode_32k", hot_decode), ("train_4k", hot_train)):
+        d = cold.submit(shape)
+        assert d.config_id == hot.config_id
+        assert [(r.config_id, r.score) for r in d.ranking] == \
+            [(r.config_id, r.score) for r in hot.ranking]
+
+
+def test_service_reprice_rejects_unknown_ids_before_mutating():
+    """A batch with an unknown config id must fail atomically — the table
+    untouched, live states still in sync with it (the desync would
+    otherwise cache wrong rankings on the next valid tick)."""
+    svc = live_service()
+    d1 = svc.submit("decode_32k")
+    before = dict(svc.price_source.items())
+    with pytest.raises(ValueError, match="unknown config ids"):
+        svc.reprice({"dp256xtp1": 100.0, "zzz": 5.0})
+    assert dict(svc.price_source.items()) == before
+    assert svc.price_epoch == d1.price_epoch
+    svc.reprice({"v5p-dp16xtp16": 250.0})       # next valid tick is sound
+    hot = svc.submit("decode_32k")
+    cold = live_service()
+    cold.price_source.apply({"v5p-dp16xtp16": 250.0})
+    cold.invalidate_prices()
+    assert hot.config_id == cold.submit("decode_32k").config_id
+
+
+def test_direct_table_apply_forces_cold_recompute():
+    """Quotes applied to the table outside reprice() must not be masked
+    by a stale cached ranking: the table version is part of the cache
+    key, so the next submit recomputes cold at the real prices."""
+    svc = live_service()
+    d1 = svc.submit("decode_32k")
+    assert d1.config_id == "dp16xtp16"
+    svc.price_source.apply({"v5p-dp16xtp16": 120.0})    # bypasses reprice
+    d2 = svc.submit("decode_32k")
+    assert not d2.from_cache
+    assert d2.config_id == "v5p-dp16xtp16"
+    assert d2.hourly_cost == 120.0
+
+
+def test_service_reprice_requires_price_table():
+    recs = [WorkloadRecord(arch="a1", shape="decode_32k", mesh=m,
+                           step_seconds=v["decode_32k"])
+            for m, v in SPEED.items()]
+    svc = make_service(MESH_OPTIONS, recs, TpuPriceModel("ondemand"))
+    with pytest.raises(ValueError, match="PriceTable"):
+        svc.reprice({"dp256xtp1": 1.0})
+
+
+def test_service_reprice_drops_states_for_stale_trace():
+    svc = live_service()
+    svc.submit("decode_32k")
+    svc.store.add("a1:decode_32k", "dp256xtp1", 0.001,
+                  job_class=JobClass.A, group="a1")
+    assert svc.reprice({"dp256xtp1": 50.0}) == 0    # stale state dropped
+    d = svc.submit("decode_32k")                    # cold rebuild, new trace
+    assert not d.from_cache
+    assert d.config_id == "dp256xtp1"
+
+
+def test_rank_cached_reports_hit_miss_explicitly():
+    """Satellite: from_cache must come from the lookup itself, not from
+    before/after deltas of the global hit counter."""
+    svc = live_service()
+    ranking, from_cache = svc.rank_cached(job_class=JobClass.A)
+    assert not from_cache
+    again, from_cache = svc.rank_cached(job_class=JobClass.A)
+    assert from_cache and again == ranking
+    # perturbing the counters cannot corrupt the reported fact
+    svc.cache_hits += 100
+    ranked, from_cache = svc.rank_cached(job_class=JobClass.B)
+    assert not from_cache
+
+
+# --- the simulated spot feed -----------------------------------------------------
+
+def base_prices():
+    cat = TpuSliceCatalog(MESH_OPTIONS, TpuPriceModel("ondemand"))
+    return {o.name: cat.hourly_cost(o.name) for o in MESH_OPTIONS}
+
+
+def test_feed_is_deterministic_and_protocol_shaped():
+    f1 = SimulatedSpotFeed(base_prices(), seed=5, change_fraction=0.5)
+    f2 = SimulatedSpotFeed(base_prices(), seed=5, change_fraction=0.5)
+    assert isinstance(f1, PriceFeed)
+    s1 = [f1.poll(t) for t in range(20)]
+    s2 = list(f2.stream(20))
+    assert s1 == s2
+    assert any(s1), "a 0.5 change fraction must emit deltas"
+    different = SimulatedSpotFeed(base_prices(), seed=6, change_fraction=0.5)
+    assert [different.poll(t) for t in range(20)] != s1
+
+
+def test_feed_prices_stay_positive_and_banded():
+    base = base_prices()
+    feed = SimulatedSpotFeed(base, seed=1, change_fraction=1.0,
+                             volatility=0.5, band=4.0)
+    for batch in feed.stream(50):
+        for d in batch:
+            assert base[d.config_id] / 4.0 <= d.price \
+                <= base[d.config_id] * 4.0
+
+
+def test_feed_discount_event_lands_at_boundary():
+    base = base_prices()
+    feed = SimulatedSpotFeed(
+        base, seed=2, change_fraction=0.0, volatility=0.0,
+        events=[MarketEvent("r0", 3, 4, factor=0.5, kind="discount")],
+        regions=("r0",))                    # everything in the window
+    assert feed.poll(0) == () and feed.poll(1) == () and feed.poll(2) == ()
+    start = {d.config_id: d.price for d in feed.poll(3)}
+    assert start and all(
+        p == pytest.approx(base[c] * 0.5) for c, p in start.items())
+    assert feed.poll(5) == ()               # mid-window, no re-quotes needed
+    end = {d.config_id: d.price for d in feed.poll(7)}
+    assert end and all(
+        p == pytest.approx(base[c]) for c, p in end.items())
+
+
+def test_feed_eviction_spike():
+    base = base_prices()
+    feed = SimulatedSpotFeed(
+        base, seed=2, change_fraction=0.0, volatility=0.0,
+        events=[MarketEvent("r0", 1, 2, factor=3.0, kind="eviction")],
+        regions=("r0",))
+    spike = {d.config_id: d.price for d in feed.poll(1)}
+    assert all(p == pytest.approx(base[c] * 3.0) for c, p in spike.items())
+
+
+def test_feed_rejects_bad_params():
+    with pytest.raises(ValueError, match="change_fraction"):
+        SimulatedSpotFeed({"a": 1.0}, change_fraction=1.5)
+    with pytest.raises(ValueError, match="band"):
+        SimulatedSpotFeed({"a": 1.0}, band=0.5)
+    with pytest.raises(ValueError, match="non-positive"):
+        SimulatedSpotFeed({"a": 0.0})
+
+
+# --- ticker ----------------------------------------------------------------------
+
+def test_ticker_drives_epochs_only_on_deltas():
+    svc = live_service()
+    svc.submit("decode_32k")
+    quiet = SimulatedSpotFeed(dict(svc.price_source.items()), seed=0,
+                              change_fraction=0.0)
+    ticker = PriceTicker(quiet, svc)
+    epoch = svc.price_epoch
+    ticker.run(10)
+    assert svc.price_epoch == epoch         # quiet market: no invalidation
+    assert ticker.tick_count == 10 and ticker.epochs_driven == 0
+    busy = SimulatedSpotFeed(dict(svc.price_source.items()), seed=0,
+                             change_fraction=1.0)
+    applied = PriceTicker(busy, svc).run(3)
+    assert applied > 0
+    assert svc.price_epoch > epoch
+    # the service's table tracks the feed's quotes exactly
+    for cid in svc.catalog.ids():
+        assert svc.price_source[cid] == busy.price_of(cid)
+
+
+def test_ticker_requires_price_table_source():
+    recs = [WorkloadRecord(arch="a1", shape="decode_32k", mesh=m,
+                           step_seconds=v["decode_32k"])
+            for m, v in SPEED.items()]
+    svc = make_service(MESH_OPTIONS, recs, TpuPriceModel("ondemand"))
+    feed = SimulatedSpotFeed(base_prices(), seed=0)
+    with pytest.raises(ValueError, match="PriceTable"):
+        PriceTicker(feed, svc)
+
+
+# --- daemon ----------------------------------------------------------------------
+
+def make_daemon(seed=0, change_fraction=0.3):
+    svc = live_service()
+    feed = SimulatedSpotFeed(dict(svc.price_source.items()), seed=seed,
+                             change_fraction=change_fraction)
+    return SelectionDaemon(svc, feed)
+
+
+def test_daemon_stream_is_deterministic():
+    jobs = ["decode_32k", "train_4k"]
+    a = make_daemon(seed=4)
+    b = make_daemon(seed=4)
+    sa = a.run(synthetic_stream(jobs, 500, seed=4))
+    sb = b.run(synthetic_stream(jobs, 500, seed=4))
+    assert a.journal_dump() == b.journal_dump()
+    assert (sa.decisions, sa.ticks, sa.epochs) == \
+        (sb.decisions, sb.ticks, sb.epochs)
+    assert sa.decisions > 0 and sa.ticks > 0
+    c = make_daemon(seed=9)
+    c.run(synthetic_stream(jobs, 500, seed=9))
+    assert c.journal_dump() != a.journal_dump()
+
+
+def test_daemon_journal_roundtrip(tmp_path):
+    daemon = make_daemon(seed=1)
+    decisions = []
+    for ev in synthetic_stream(["decode_32k", "train_4k"], 200, seed=1):
+        d = daemon.handle(ev)
+        if d is not None:
+            decisions.append(d)
+    path = str(tmp_path / "journal.jsonl")
+    daemon.save_journal(path)
+    header, records = SelectionDaemon.load_journal(path)
+    assert header["format"] == "repro.market.decision-journal"
+    assert header["catalog"] == [o.name for o in MESH_OPTIONS]
+    decided = [r for r in records if r["kind"] == "decision"]
+    assert len(decided) == len(decisions) == daemon.stats.decisions
+    for rec, d in zip(decided, decisions):
+        assert rec["job"] == d.job_id
+        assert rec["config"] == d.config_id
+        assert rec["hourly_cost"] == d.hourly_cost
+        assert rec["price_epoch"] == d.price_epoch
+        assert rec["from_cache"] == d.from_cache
+    seqs = [r["seq"] for r in records]
+    assert seqs == sorted(seqs)
+
+
+def test_daemon_rejects_foreign_journal():
+    with pytest.raises(ValueError, match="not a decision journal"):
+        SelectionDaemon.loads_journal(json.dumps({"format": "x"}) + "\n")
+    with pytest.raises(ValueError, match="version"):
+        SelectionDaemon.loads_journal(json.dumps(
+            {"format": "repro.market.decision-journal", "version": 9}))
+
+
+def test_daemon_journals_rejections_and_keeps_serving():
+    daemon = make_daemon()
+    assert daemon.handle(Submission("decode_32k",
+                                    exclude_groups=("a1", "a2"))) is None
+    assert daemon.stats.rejected == 1
+    d = daemon.handle(Submission("decode_32k"))
+    assert d is not None and d.config_id == "dp16xtp16"
+    kinds = [json.loads(ln)["kind"]
+             for ln in daemon.journal_dump().splitlines()[1:]]
+    assert kinds == ["rejected", "decision"]
+
+
+def test_daemon_amortizes_submissions_through_cache():
+    daemon = make_daemon(change_fraction=0.05)
+    stream = [Submission("decode_32k")] * 50 + [Tick()] + \
+        [Submission("decode_32k")] * 50
+    daemon.run(stream)
+    svc = daemon.service
+    # at most one cold miss + (maybe) one incremental refresh — never 100
+    assert svc.cache_misses <= 2
+    assert svc.cache_hits >= 98
+
+
+# --- migration advisor -----------------------------------------------------------
+
+def decision_for(svc, shape="decode_32k"):
+    return svc.submit(shape)
+
+
+def test_migrate_stays_when_already_best():
+    svc = live_service()
+    d = decision_for(svc)
+    advice = should_migrate(d, d.ranking, switch_cost_hours=1.0)
+    assert not advice.migrate and advice.saving_per_hour == 0.0
+
+
+def test_migrate_when_savings_beat_switch_cost():
+    svc = live_service()
+    before = decision_for(svc)              # v5e wins at on-demand prices
+    svc.reprice({"v5p-dp16xtp16": 250.0})   # v5p now cheap AND fast
+    after = decision_for(svc)
+    assert after.config_id == "v5p-dp16xtp16"
+    go = should_migrate(before, after.ranking, switch_cost_hours=0.5,
+                        horizon_hours=24.0)
+    assert go.migrate and go.net_saving_usd > 0
+    # the same gap under a tiny horizon cannot amortize the switch
+    stay = should_migrate(before, after.ranking, switch_cost_hours=10.0,
+                          horizon_hours=0.1)
+    assert not stay.migrate
+
+
+def test_migrate_hysteresis_damps_marginal_wins():
+    svc = live_service()
+    before = decision_for(svc)
+    svc.reprice({"v5p-dp16xtp16": 300.0})   # marginally better than v5e
+    after = decision_for(svc)
+    assert after.config_id == "v5p-dp16xtp16"
+    loose = should_migrate(before, after.ranking, switch_cost_hours=0.5,
+                           horizon_hours=1.0, hysteresis=1.0)
+    tight = should_migrate(before, after.ranking, switch_cost_hours=0.5,
+                           horizon_hours=1.0, hysteresis=100.0)
+    assert loose.saving_per_hour > 0
+    assert not tight.migrate                # margin demands damp the move
+    with pytest.raises(ValueError, match="hysteresis"):
+        should_migrate(before, after.ranking, 0.5, hysteresis=0.0)
+
+
+def test_plan_decode_placement_hysteresis():
+    from repro.serve.engine import plan_decode_placement
+    svc = live_service()
+    current = plan_decode_placement(svc)
+    assert current.config_id == "dp16xtp16"
+    # small wiggle: the winner flips but not by enough for a 2h switch
+    svc.reprice({"v5p-dp16xtp16": 300.0})
+    kept = plan_decode_placement(svc, current=current,
+                                 switch_cost_hours=2.0, horizon_hours=1.0)
+    assert kept.config_id == current.config_id
+    assert kept.price_epoch == svc.price_epoch      # re-stamped, not stale
+    assert kept.hourly_cost == svc.price_source[kept.config_id]
+    # a crash makes the move worth it
+    svc.reprice({"v5p-dp16xtp16": 120.0})
+    moved = plan_decode_placement(svc, current=current,
+                                  switch_cost_hours=2.0,
+                                  horizon_hours=24.0)
+    assert moved.config_id == "v5p-dp16xtp16"
+
+
+# --- ProfilingStore growth guarantee ---------------------------------------------
+
+def test_store_growth_is_amortized_doubling():
+    """10k row inserts and 10k column inserts each cost O(log n)
+    backing-array reallocations, not O(n)."""
+    import math
+    n = 10_000
+    rows = ProfilingStore(config_ids=["c0"])
+    for i in range(n):
+        rows.add(f"j{i}", "c0", 1.0)
+    assert len(rows.job_ids) == n
+    assert rows.realloc_count <= 2 * math.ceil(math.log2(n)) + 2
+
+    cols = ProfilingStore()
+    for i in range(n):
+        cols.add("j0", f"c{i}", 1.0)
+    assert len(cols.config_ids) == n
+    assert cols.realloc_count <= 2 * math.ceil(math.log2(n)) + 2

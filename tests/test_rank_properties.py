@@ -8,7 +8,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.selector import rank_dense, rank_pairs  # noqa: E402
+from repro.selector import RankState, rank_dense, rank_pairs  # noqa: E402
 
 
 @st.composite
@@ -87,6 +87,41 @@ def test_rank_jax_backend_agrees_with_numpy(table):
     jx = rank_pairs(rt, jobs, cfgs, prices.__getitem__, backend="jax")
     for a, b in zip(base, jx):
         assert a.score == pytest.approx(b.score, rel=1e-4)
+
+
+@st.composite
+def delta_streams(draw):
+    """A runtime table plus a stream of per-tick price-delta batches."""
+    jobs, cfgs, rt, prices = draw(runtime_tables())
+    n_ticks = draw(st.integers(1, 6))
+    stream = []
+    for _ in range(n_ticks):
+        changed = draw(st.lists(st.sampled_from(cfgs), min_size=1,
+                                max_size=len(cfgs), unique=True))
+        stream.append({c: draw(st.floats(0.1, 50.0, allow_nan=False))
+                       for c in changed})
+    return jobs, cfgs, rt, prices, stream
+
+
+@settings(max_examples=40, deadline=None)
+@given(delta_streams())
+def test_reprice_stream_equals_cold_rank_elementwise(data):
+    """Streaming price semantics (DESIGN.md §6): after any sequence of
+    incremental reprice ticks, the live RankState's ranking is
+    element-wise equal — exact floats — to a cold rank_dense at the
+    final prices."""
+    import numpy as np
+    jobs, cfgs, rt, prices, stream = data
+    hours = np.asarray([[rt[(j, c)] for c in cfgs] for j in jobs])
+    mask = np.ones_like(hours, dtype=bool)
+    live = np.asarray([prices[c] for c in cfgs])
+    state = RankState(hours, mask, live, cfgs, job_ids=jobs)
+    for deltas in stream:
+        state.reprice(deltas)
+        for c, p in deltas.items():
+            live[cfgs.index(c)] = p
+        assert state.ranking() == rank_dense(hours, mask, live, cfgs,
+                                             job_ids=jobs)
 
 
 @settings(max_examples=25, deadline=None)
