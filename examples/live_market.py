@@ -74,8 +74,13 @@ def main() -> None:
     final = service.submit("decode_32k")
     print(f"\ncurrent winner under live prices: {final.config_id} "
           f"at {final.hourly_cost:.0f} $/h")
+    # quote savings/switch cost off the fleet's $/h under *current*
+    # prices, not the rate stamped on the t=0 decision
+    current_rate = service.catalog.hourly_cost(initial.config_id,
+                                               service.price_source)
     advice = should_migrate(initial, final.ranking, switch_cost_hours=0.5,
-                            horizon_hours=24.0)
+                            horizon_hours=24.0,
+                            current_hourly_cost=current_rate)
     verb = "MIGRATE" if advice.migrate else "STAY"
     print(f"fleet advisor: {verb} ({advice.reason})")
     if advice.migrate:

@@ -19,8 +19,8 @@ from typing import (Any, Dict, Hashable, Iterable, Iterator, List, Optional,
                     Sequence, Tuple, Union)
 
 from repro.core.trace import JobClass
-from repro.selector import Decision, SelectionService
-from repro.market.feed import PriceFeed
+from repro.selector import Decision, NothingRankableError, SelectionService
+from repro.market.feed import PriceFeed, hash_uniform
 from repro.market.ticker import PriceTicker
 
 JOURNAL_FORMAT = "repro.market.decision-journal"
@@ -50,9 +50,9 @@ class DaemonStats:
     submissions: int = 0
     decisions: int = 0
     rejected: int = 0           # submissions with nothing rankable
-    ticks: int = 0
-    deltas: int = 0
-    epochs: int = 0
+    ticks: int = 0              # mirrors PriceTicker.tick_count
+    deltas: int = 0             # mirrors PriceTicker.deltas_applied
+    epochs: int = 0             # mirrors PriceTicker.epochs_driven
 
 
 class SelectionDaemon:
@@ -73,10 +73,11 @@ class SelectionDaemon:
         self.stats.events += 1
         if isinstance(event, Tick):
             deltas = self.ticker.tick()
-            self.stats.ticks += 1
-            self.stats.deltas += len(deltas)
+            # the ticker owns the tick bookkeeping; mirror, don't re-count
+            self.stats.ticks = self.ticker.tick_count
+            self.stats.deltas = self.ticker.deltas_applied
+            self.stats.epochs = self.ticker.epochs_driven
             if deltas:
-                self.stats.epochs += 1
                 self._record({
                     "kind": "tick", "seq": self._next_seq(),
                     "deltas": len(deltas),
@@ -87,9 +88,10 @@ class SelectionDaemon:
             decision = self.service.submit(
                 event.job_id, annotation=event.annotation,
                 exclude_groups=event.exclude_groups)
-        except ValueError:
+        except NothingRankableError:
             # nothing rankable for this submission (empty class, id
-            # mismatch): journal the rejection, keep serving
+            # mismatch): journal the rejection, keep serving — any other
+            # ValueError is misconfiguration and propagates
             self.stats.rejected += 1
             self._record({"kind": "rejected", "seq": self._next_seq(),
                           "job": event.job_id,
@@ -161,15 +163,9 @@ def synthetic_stream(job_ids: Sequence[Hashable], n_events: int, *,
     """
     if not job_ids:
         raise ValueError("no job ids to submit")
-    import hashlib
-
-    def _u(*key: object) -> float:
-        raw = "|".join(str(k) for k in (seed,) + key).encode()
-        return (int.from_bytes(hashlib.md5(raw).digest()[:8], "big") + 1) \
-            / (2 ** 64 + 2)
-
     for i in range(n_events):
-        if _u("kind", i) < tick_fraction:
+        if hash_uniform(seed, "kind", i) < tick_fraction:
             yield Tick()
         else:
-            yield Submission(job_ids[int(_u("job", i) * len(job_ids))])
+            yield Submission(job_ids[int(hash_uniform(seed, "job", i)
+                                         * len(job_ids))])

@@ -37,6 +37,20 @@ from typing import (Dict, Hashable, Iterator, Mapping, Protocol, Sequence,
                     Tuple, runtime_checkable)
 
 
+def hash_digest(seed: int, *key: object) -> int:
+    """64-bit digest of ``seed|key`` — the repo's hash-seeding discipline
+    (:mod:`repro.core.spark_sim`): every draw is a pure function of its
+    key, shared by the feed and the daemon's synthetic stream so their
+    determinism contracts can never drift apart."""
+    raw = "|".join(str(k) for k in (seed,) + key).encode()
+    return int.from_bytes(hashlib.md5(raw).digest()[:8], "big")
+
+
+def hash_uniform(seed: int, *key: object) -> float:
+    """Deterministic uniform draw in (0, 1) from :func:`hash_digest`."""
+    return (hash_digest(seed, *key) + 1) / (2 ** 64 + 2)
+
+
 @dataclasses.dataclass(frozen=True)
 class PriceDelta:
     """One absolute re-quote: ``config_id`` now costs ``price`` $/h."""
@@ -114,11 +128,10 @@ class SimulatedSpotFeed:
 
     # -- deterministic randomness (spark_sim hash-seeding style) ------------
     def _digest(self, *key: object) -> int:
-        raw = "|".join(str(k) for k in (self.seed,) + key).encode()
-        return int.from_bytes(hashlib.md5(raw).digest()[:8], "big")
+        return hash_digest(self.seed, *key)
 
     def _uniform(self, *key: object) -> float:
-        return (self._digest(*key) + 1) / (2 ** 64 + 2)
+        return hash_uniform(self.seed, *key)
 
     def _gauss(self, *key: object) -> float:
         u1 = self._uniform(*key, "u1")

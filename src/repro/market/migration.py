@@ -9,9 +9,11 @@ switch cost by a hysteresis margin before advising a move (DESIGN.md §6).
 The cost model: ``mean_norm_cost`` is the fleet's ×-optimal cost factor
 for its class, so retargeting from the current config to the ranking's
 winner scales the fleet's spend rate by ``mnc(best) / mnc(current)`` at
-constant throughput.  Savings are quoted off the current fleet's $/h;
-the switch itself is priced as ``switch_cost_hours`` of dual-running
-(old fleet drains while the new one warms).
+constant throughput.  Savings are quoted off the current fleet's $/h
+under *current* prices (callers with a live price source re-price the
+current config and pass it in); the switch itself is priced as
+``switch_cost_hours`` of dual-running (old fleet drains while the new
+one warms).
 """
 from __future__ import annotations
 
@@ -43,12 +45,21 @@ def should_migrate(current_placement: Decision,
                    ranking: Sequence[RankedConfig],
                    switch_cost_hours: float, *,
                    horizon_hours: float = 24.0,
-                   hysteresis: float = 1.25) -> MigrationAdvice:
+                   hysteresis: float = 1.25,
+                   current_hourly_cost: Optional[float] = None
+                   ) -> MigrationAdvice:
     """Advise whether a running fleet should move to the ranking's winner.
 
     ``hysteresis`` > 1 demands the projected horizon savings exceed the
     switch cost by that margin — the damper that keeps a fleet from
     ping-ponging between two near-equal configs on every price wiggle.
+
+    ``current_hourly_cost`` is the fleet's $/h *under current prices*;
+    callers holding a live price source should re-price the current
+    config and pass it (as :func:`repro.serve.engine.plan_decode_placement`
+    does) so the quoted dollar figures track the market.  It defaults to
+    the rate stamped on ``current_placement``, which may predate any
+    number of price moves.
     """
     if not ranking:
         raise ValueError("empty ranking")
@@ -57,7 +68,10 @@ def should_migrate(current_placement: Decision,
                          "and hysteresis > 0")
     current_id = current_placement.config_id
     best = ranking[0]
-    rate = current_placement.hourly_cost
+    rate = current_hourly_cost if current_hourly_cost is not None \
+        else current_placement.hourly_cost
+    if not rate > 0:
+        raise ValueError(f"non-positive current hourly cost {rate!r}")
     switch_cost = switch_cost_hours * rate
 
     if best.config_id == current_id:

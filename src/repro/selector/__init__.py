@@ -29,13 +29,14 @@ See DESIGN.md for the full architecture.
 """
 from repro.selector.catalog import (BaseCatalog, GcpVmCatalog, PriceTable,
                                     ResourceCatalog, TpuSliceCatalog)
-from repro.selector.rank import (RankedConfig, RankState, rank_dense,
-                                 rank_pairs)
+from repro.selector.rank import (NothingRankableError, RankedConfig,
+                                 RankState, rank_dense, rank_pairs)
 from repro.selector.store import ProfilingStore
 from repro.selector.service import Decision, SelectionService
 
 __all__ = [
-    "BaseCatalog", "Decision", "GcpVmCatalog", "PriceTable",
-    "ProfilingStore", "RankState", "RankedConfig", "ResourceCatalog",
-    "SelectionService", "TpuSliceCatalog", "rank_dense", "rank_pairs",
+    "BaseCatalog", "Decision", "GcpVmCatalog", "NothingRankableError",
+    "PriceTable", "ProfilingStore", "RankState", "RankedConfig",
+    "ResourceCatalog", "SelectionService", "TpuSliceCatalog", "rank_dense",
+    "rank_pairs",
 ]

@@ -44,10 +44,9 @@ class PriceTable:
     """
 
     def __init__(self, prices: Mapping[Hashable, float]):
-        self._prices: Dict[Hashable, float] = {}
         #: bumped on every :meth:`apply` (consumers key caches on it).
         self.version = 0
-        self._validate_and_set(prices.items())
+        self._prices: Dict[Hashable, float] = self._validated(prices)
 
     @classmethod
     def from_catalog(cls, catalog: "BaseCatalog",
@@ -56,19 +55,26 @@ class PriceTable:
         return cls({e: catalog.hourly_cost(e, price_source)
                     for e in catalog.ids()})
 
-    def _validate_and_set(self,
-                          items: Iterable[Tuple[Hashable, float]]) -> None:
-        for entry_id, price in items:
+    @staticmethod
+    def _validated(prices: Mapping[Hashable, float]) -> Dict[Hashable, float]:
+        out: Dict[Hashable, float] = {}
+        for entry_id, price in prices.items():
             if not price > 0:
                 raise ValueError(
                     f"non-positive price {price!r} for {entry_id!r}")
-            self._prices[entry_id] = float(price)
+            out[entry_id] = float(price)
+        return out
 
     def apply(self, deltas: Mapping[Hashable, float]) -> None:
-        """Apply absolute re-quotes ``{entry_id: new $/h}``; one epoch."""
+        """Apply absolute re-quotes ``{entry_id: new $/h}``; one epoch.
+
+        All-or-nothing: the whole batch is validated before any entry is
+        assigned, so a bad quote can never leave the table (and its
+        version) half-updated against version-keyed ranking caches.
+        """
         if not deltas:
             return
-        self._validate_and_set(deltas.items())
+        self._prices.update(self._validated(deltas))
         self.version += 1
 
     def __getitem__(self, entry_id: Hashable) -> float:

@@ -35,6 +35,15 @@ except ImportError:  # pragma: no cover
     _HAVE_JAX = False
 
 
+class NothingRankableError(ValueError):
+    """The selection has no rankable universe — an empty job selection or
+    an entirely-unprofiled catalog.  A routine per-submission outcome
+    (e.g. an exclusion set that empties a class), distinct from the other
+    ``ValueError``\\ s raised here, which indicate misconfiguration (shape
+    mismatches, missing price sources, broken traces) and should never be
+    swallowed as a rejection."""
+
+
 @dataclasses.dataclass(frozen=True)
 class RankedConfig:
     config_id: Hashable
@@ -92,7 +101,7 @@ def rank_dense(hours: np.ndarray, mask: np.ndarray, prices: np.ndarray,
         raise ValueError(f"shape mismatch: hours {hours.shape}, "
                          f"mask {mask.shape}, prices {prices.shape}")
     if hours.shape[0] == 0:
-        raise ValueError("no test jobs to learn from")
+        raise NothingRankableError("no test jobs to learn from")
     bad = mask & ~((hours * prices[None, :]) > 0)
     if bad.any():
         row = int(np.argwhere(bad)[0][0])
@@ -123,7 +132,7 @@ def rank_pairs(
     callers of ``repro.core.flora.rank_generic`` keep one code path.
     """
     if not jobs:
-        raise ValueError("no test jobs to learn from")
+        raise NothingRankableError("no test jobs to learn from")
     price_of = hourly_cost if callable(hourly_cost) else hourly_cost.__getitem__
     hours = np.zeros((len(jobs), len(config_ids)))
     mask = np.zeros_like(hours, dtype=bool)
@@ -179,7 +188,7 @@ class RankState:
                              f"mask {self.mask.shape}, "
                              f"prices {self.prices.shape}")
         if self.hours.shape[0] == 0:
-            raise ValueError("no test jobs to learn from")
+            raise NothingRankableError("no test jobs to learn from")
         self._pos = {c: i for i, c in enumerate(self.config_ids)}
         if len(self._pos) != len(self.config_ids):
             raise ValueError("duplicate config ids")
@@ -255,7 +264,10 @@ class RankState:
         return _materialize(self.scores, self.counts, self.config_ids)
 
     def winner(self) -> RankedConfig:
-        """argmin only — O(C), no list build/sort (the daemon hot path)."""
+        """argmin only — O(C), no list build/sort.  A cheap peek for
+        callers that only need the top pick; the serving path proper goes
+        through :meth:`ranking`, since a ``Decision`` always carries the
+        full sorted list."""
         finite = self.counts > 0
         if not finite.any():
             i = 0

@@ -27,7 +27,8 @@ from typing import (Any, Callable, Dict, Hashable, Mapping, Optional,
 
 from repro.core.trace import JobClass
 from repro.selector.catalog import BaseCatalog, PriceTable
-from repro.selector.rank import RankedConfig, RankState, rank_dense
+from repro.selector.rank import (NothingRankableError, RankedConfig,
+                                 RankState, rank_dense)
 from repro.selector.store import ProfilingStore
 
 
@@ -110,8 +111,10 @@ class SelectionService:
         ranking disagree within one epoch).  Delta ids are validated
         against the catalog *before* the table mutates, so a bad batch
         cannot desync live states from the table.  The table is updated,
-        the epoch bumps, and every live :class:`RankState` is repriced in
-        place; refreshed rankings materialize lazily on the next
+        the epoch bumps, and every live :class:`RankState` that was in
+        sync with the table before this tick is repriced in place (a
+        state that missed an out-of-band ``table.apply`` is dropped and
+        rebuilt cold); refreshed rankings materialize lazily on the next
         ``rank``/``submit`` (building and sorting the ranking list costs
         more than the incremental update itself at 10k configs — no point
         paying it per tick for classes nobody submits).  Returns the
@@ -128,6 +131,7 @@ class SelectionService:
         if unknown:
             raise ValueError(
                 f"unknown config ids in price deltas: {unknown[:3]!r}")
+        prev_tag = self._price_tag()
         self._price_source.apply(deltas)
         self._price_epoch += 1
         self._cache.clear()
@@ -135,8 +139,12 @@ class SelectionService:
         refreshed = 0
         for key, state in list(self._states.items()):
             store_version = key[0]
-            if store_version != self.store.version:
-                del self._states[key]       # stale trace: drop, rebuild cold
+            if store_version != self.store.version or \
+                    self._state_tags.get(key) != prev_tag:
+                # stale trace, or a state that missed an out-of-band
+                # table.apply before this tick: repricing it would serve
+                # quotes it never saw — drop it, rebuild cold on demand
+                del self._states[key]
                 self._state_tags.pop(key, None)
                 continue
             state.reprice(deltas)
@@ -173,10 +181,18 @@ class SelectionService:
             self.cache_hits += 1
             return ranking, True
         self.cache_misses += 1
+        # a miss means the tag (or trace) moved on; entries under dead
+        # tags or store versions are unreachable forever (epoch, table
+        # version and store version are all monotonic) — prune them so
+        # out-of-band table.apply + submit cycles don't grow the cache
+        # without bound
+        for stale in [k for k in self._cache
+                      if k[:2] != tag or k[2] != self.store.version]:
+            del self._cache[stale]
         jobs = self.store.select_jobs(job_class=job_class,
                                       exclude_groups=exclude_groups)
         if not jobs:
-            raise ValueError("no test jobs to learn from")
+            raise NothingRankableError("no test jobs to learn from")
         config_ids = self.catalog.ids()
         hours, mask = self.store.matrix(job_ids=jobs, config_ids=config_ids)
         prices = self.catalog.price_vector(self._price_source)
@@ -238,7 +254,7 @@ class SelectionService:
             # every catalog entry is unprofiled for this selection
             # (catalog/store id mismatch, or a fully-masked trace) —
             # an arbitrary pick must never look like a decision.
-            raise ValueError(
+            raise NothingRankableError(
                 f"no profiled configurations to rank for job {job_id!r} "
                 f"(class {klass})")
         return Decision(

@@ -58,16 +58,25 @@ def plan_decode_placement(service: SelectionService,
     if current is None or decision.config_id == current.config_id:
         return decision
     from repro.market.migration import should_migrate
+    try:
+        # quote savings/switch cost off today's rate, not the $/h stamped
+        # when `current` was decided (which may predate any price move)
+        current_rate: Optional[float] = service.catalog.hourly_cost(
+            current.config_id, service.price_source)
+    except KeyError:
+        # deprovisioned entry: the advisor sees it as unrankable and
+        # forces the move off the stamped rate
+        current_rate = None
     advice = should_migrate(current, decision.ranking, switch_cost_hours,
                             horizon_hours=horizon_hours,
-                            hysteresis=hysteresis)
+                            hysteresis=hysteresis,
+                            current_hourly_cost=current_rate)
     if advice.migrate:
         return decision
     return dataclasses.replace(
         decision, config_id=current.config_id,
         entry=service.catalog.entry(current.config_id),
-        hourly_cost=service.catalog.hourly_cost(current.config_id,
-                                                service.price_source))
+        hourly_cost=current_rate)
 
 
 @dataclasses.dataclass

@@ -79,6 +79,19 @@ def test_price_table_rejects_nonpositive():
     assert table.version == 0
 
 
+def test_price_table_apply_is_atomic():
+    """A batch with one bad quote must leave the table (and its version)
+    untouched — a half-applied batch would desync prices from every
+    version-keyed ranking cache."""
+    table = PriceTable({"a": 1.0, "b": 2.0})
+    with pytest.raises(ValueError, match="non-positive"):
+        table.apply({"a": 5.0, "b": -1.0})
+    assert table["a"] == 1.0 and table["b"] == 2.0
+    assert table.version == 0
+    table.apply({"a": 5.0, "b": 3.0})       # the good batch still lands
+    assert table["a"] == 5.0 and table.version == 1
+
+
 # --- RankState: incremental reprice bit-identity ---------------------------------
 
 def test_rank_state_build_matches_rank_dense():
@@ -212,6 +225,39 @@ def test_direct_table_apply_forces_cold_recompute():
     assert not d2.from_cache
     assert d2.config_id == "v5p-dp16xtp16"
     assert d2.hourly_cost == 120.0
+
+
+def test_out_of_band_apply_then_reprice_is_not_served_stale():
+    """The apply/reprice interleaving: a live state that missed an
+    out-of-band ``table.apply`` must not be re-tagged as current by a
+    later ``reprice`` touching different configs — it gets dropped and
+    rebuilt cold, matching a fresh service at the same table prices."""
+    svc = live_service()
+    d1 = svc.submit("decode_32k")
+    assert d1.config_id == "dp16xtp16"
+    svc.price_source.apply({"v5p-dp16xtp16": 0.001})    # out-of-band quote
+    assert svc.reprice({"dp256xtp1": 50.0}) == 0        # stale state dropped
+    d2 = svc.submit("decode_32k")
+    assert not d2.from_cache                            # cold rebuild
+    cold = live_service()
+    cold.price_source.apply({"v5p-dp16xtp16": 0.001})
+    cold.price_source.apply({"dp256xtp1": 50.0})
+    cold.invalidate_prices()
+    d_cold = cold.submit("decode_32k")
+    assert d2.config_id == d_cold.config_id == "v5p-dp16xtp16"
+    assert [(r.config_id, r.score) for r in d2.ranking] == \
+        [(r.config_id, r.score) for r in d_cold.ranking]
+
+
+def test_cache_prunes_entries_under_dead_price_tags():
+    """Out-of-band table.apply + submit cycles must not grow the ranking
+    cache without bound: entries keyed on superseded table versions are
+    unreachable forever and get pruned on the next miss."""
+    svc = live_service()
+    for i in range(5):
+        svc.price_source.apply({"dp256xtp1": 50.0 + i})
+        svc.submit("decode_32k")
+    assert len(svc._cache) == 1             # only the current tag survives
 
 
 def test_service_reprice_requires_price_table():
@@ -412,6 +458,18 @@ def test_daemon_journals_rejections_and_keeps_serving():
     assert kinds == ["rejected", "decision"]
 
 
+def test_daemon_propagates_misconfiguration():
+    """Only NothingRankableError is a routine rejection; a genuine
+    misconfiguration (here: an unknown ranking backend) must propagate
+    instead of being journaled as 'rejected'."""
+    daemon = make_daemon()
+    daemon.service.backend = "bogus"
+    with pytest.raises(ValueError, match="unknown backend"):
+        daemon.handle(Submission("decode_32k"))
+    assert daemon.stats.rejected == 0
+    assert len(daemon.journal_dump().splitlines()) == 1     # header only
+
+
 def test_daemon_amortizes_submissions_through_cache():
     daemon = make_daemon(change_fraction=0.05)
     stream = [Submission("decode_32k")] * 50 + [Tick()] + \
@@ -465,6 +523,39 @@ def test_migrate_hysteresis_damps_marginal_wins():
     assert not tight.migrate                # margin demands damp the move
     with pytest.raises(ValueError, match="hysteresis"):
         should_migrate(before, after.ranking, 0.5, hysteresis=0.0)
+
+
+def test_migrate_quotes_current_rate_not_stamped():
+    """The advisor's dollar figures must track the market: callers pass
+    the fleet's re-priced $/h, not the rate stamped on a stale Decision."""
+    svc = live_service()
+    before = decision_for(svc)                  # dp16xtp16 at on-demand
+    stamped = before.hourly_cost
+    svc.reprice({"dp16xtp16": stamped * 2})     # the fleet's own quote moves
+    after = decision_for(svc)
+    assert after.config_id == "v5p-dp16xtp16"
+    fresh = svc.price_source["dp16xtp16"]
+    advice = should_migrate(before, after.ranking, switch_cost_hours=1.0,
+                            current_hourly_cost=fresh)
+    assert advice.switch_cost_usd == pytest.approx(fresh)
+    stale = should_migrate(before, after.ranking, switch_cost_hours=1.0)
+    assert stale.switch_cost_usd == pytest.approx(stamped)
+    with pytest.raises(ValueError, match="non-positive current"):
+        should_migrate(before, after.ranking, 1.0, current_hourly_cost=0.0)
+
+
+def test_plan_decode_placement_restamps_repriced_current_fleet():
+    """When the standing fleet's own price moves and the advisor says
+    stay, the returned Decision quotes today's rate, not the stale one."""
+    from repro.serve.engine import plan_decode_placement
+    svc = live_service()
+    current = plan_decode_placement(svc)                # dp16xtp16
+    svc.reprice({"dp16xtp16": 1100.0})                  # own quote spikes
+    kept = plan_decode_placement(svc, current=current,
+                                 switch_cost_hours=50.0, horizon_hours=0.1)
+    assert kept.config_id == current.config_id          # switch unamortized
+    assert kept.hourly_cost == 1100.0
+    assert kept.hourly_cost != current.hourly_cost
 
 
 def test_plan_decode_placement_hysteresis():
