@@ -29,7 +29,7 @@ import numpy as np
 from _bench_io import BenchRows
 from repro.core.trace import JobClass
 from repro.market import SelectionDaemon, SimulatedSpotFeed, synthetic_stream
-from repro.selector import (BaseCatalog, PriceTable, ProfilingStore,
+from repro.selector import (IdentityCatalog, PriceTable, ProfilingStore,
                             RankState, SelectionService, rank_dense)
 
 ROWS = BenchRows("BENCH_MARKET_JSON", "BENCH_market.json")
@@ -111,16 +111,6 @@ def bench_reprice(n_jobs: int, n_cfgs: int, frac: float,
 
 # --- the 10k-event daemon stream ---------------------------------------------
 
-class _SynthCatalog(BaseCatalog):
-    """Catalog whose entries are their own ids (PriceTable does pricing)."""
-
-    def entry(self, entry_id):
-        return entry_id
-
-    def describe(self, entry_id):
-        return {}
-
-
 def _daemon(n_jobs: int = 24, n_cfgs: int = 128, seed: int = 7
             ) -> SelectionDaemon:
     rng = np.random.default_rng(seed)
@@ -134,7 +124,7 @@ def _daemon(n_jobs: int = 24, n_cfgs: int = 128, seed: int = 7
             store.add(f"job{j}", ids[c], float(rng.uniform(0.1, 5.0)),
                       job_class=klass, group=f"g{j % 6}")
     table = PriceTable({c: float(rng.uniform(1.0, 30.0)) for c in ids})
-    service = SelectionService(_SynthCatalog(ids), store, table)
+    service = SelectionService(IdentityCatalog(ids), store, table)
     feed = SimulatedSpotFeed(dict(table.items()), seed=seed,
                              change_fraction=0.01)
     return SelectionDaemon(service, feed)

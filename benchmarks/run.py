@@ -147,6 +147,12 @@ def main() -> None:
     bench_tpu_selection()
     bench_rank_vectorized_vs_dict()
     write_json()
+    if "--with-replay" in sys.argv:
+        # the dynamic-price counterpart of the Fig. 2 rows above: replay
+        # the bundled recorded history, audit the journal, score vs the
+        # oracles (writes its own BENCH_replay.json; exits 1 on mismatch)
+        import replay_bench
+        replay_bench.main(smoke=True)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -30,6 +30,33 @@ The model captures the effects the paper's evaluation hinges on:
 A deterministic log-normal noise term models shared-tenancy variance; the
 paper ran each cell once, so noise stays in the trace (cf. §III-A "may make
 this measured test job data somewhat vulnerable to outliers").
+
+**Calibration status vs paper Table III** (seed=0; pinned by
+``tests/test_flora_core.py::test_spark_sim_calibration_pinned``):
+
+    ==============  ========  ===========
+    statistic       paper     regenerated
+    ==============  ========  ===========
+    cost mean $     1.409     1.861
+    cost min $      0.177     0.115
+    runtime mean s  1834.8    2845.1
+    runtime min s   141.7     125.9
+    runtime max s   21714.7   24985.1
+    ==============  ========  ===========
+
+The drift is a heavy-tail artifact: the model's cache-thrash blowup
+(``THRASH_CPU_FACTOR * miss_frac**4``) inflates the worst class-A cells
+more than the paper's measured cluster did, dragging the means up while
+the mins sit *below* paper (our startup/IO floors are slightly
+optimistic).  A uniform runtime rescale cannot close it — matching the
+cost mean (x0.757) pushes runtime min to 95 s, far under Table III's
+141.7 s, and any *non*-uniform re-fit moves the per-job normalized
+ranking the paper-claim tests pin (uniform scaling is
+ranking-invariant; per-cell changes are not).  Every qualitative claim
+the evaluation depends on (class A -> #9, class B -> #1, Table IV/V
+orderings, Fig. 2/3 shapes) reproduces despite the gap, so the
+constants stay as calibrated and the pinned test makes any further
+drift a deliberate, reviewed change instead of a silent one.
 """
 from __future__ import annotations
 

@@ -18,17 +18,28 @@ package makes "current" a live property instead of a one-shot argument
                :class:`~repro.selector.Decision` to versioned JSONL;
   migration -- :func:`should_migrate`: hysteresis advisor so a running
                fleet only moves when projected savings beat the switch
-               cost (wired into ``serve.engine.plan_decode_placement``).
+               cost (wired into ``serve.engine.plan_decode_placement``);
+  replay    -- :class:`RecordedPriceFeed` / :func:`record_feed`: price
+               histories as replayable CSV fixtures, and
+               :class:`JournalReplayer`: audit a decision journal against
+               cold re-ranks at each reconstructed price epoch, then
+               score it against per-epoch and static-price oracles
+               (DESIGN.md §8).
 """
 from repro.market.daemon import (DaemonStats, SelectionDaemon, Submission,
                                  Tick, synthetic_stream)
 from repro.market.feed import (MarketEvent, PriceDelta, PriceFeed,
                                SimulatedSpotFeed)
 from repro.market.migration import MigrationAdvice, should_migrate
+from repro.market.replay import (JournalReplayer, RecordedPriceFeed,
+                                 ReplayAudit, ReplayMismatch,
+                                 ReplayedDecision, record_feed)
 from repro.market.ticker import PriceTicker
 
 __all__ = [
-    "DaemonStats", "MarketEvent", "MigrationAdvice", "PriceDelta",
-    "PriceFeed", "PriceTicker", "SelectionDaemon", "SimulatedSpotFeed",
-    "Submission", "Tick", "should_migrate", "synthetic_stream",
+    "DaemonStats", "JournalReplayer", "MarketEvent", "MigrationAdvice",
+    "PriceDelta", "PriceFeed", "PriceTicker", "RecordedPriceFeed",
+    "ReplayAudit", "ReplayMismatch", "ReplayedDecision", "SelectionDaemon",
+    "SimulatedSpotFeed", "Submission", "Tick", "record_feed",
+    "should_migrate", "synthetic_stream",
 ]

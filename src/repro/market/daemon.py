@@ -24,7 +24,12 @@ from repro.market.feed import PriceFeed, hash_uniform
 from repro.market.ticker import PriceTicker
 
 JOURNAL_FORMAT = "repro.market.decision-journal"
-JOURNAL_VERSION = 1
+#: v2 makes the journal *self-contained* for replay (DESIGN.md §8): the
+#: header snapshots the starting prices and price epoch, tick records
+#: carry the applied deltas, decision records carry the winner's score
+#: and the effective exclusion set.  Every version bump MUST add a
+#: migration note to the table in DESIGN.md §8.
+JOURNAL_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,9 +67,14 @@ class SelectionDaemon:
         self.service = service
         self.ticker = PriceTicker(feed, service)
         self.stats = DaemonStats()
+        epoch, prices = service.price_snapshot()
         self._journal: List[str] = [json.dumps({
             "format": JOURNAL_FORMAT, "version": JOURNAL_VERSION,
-            "catalog": list(service.catalog.ids())})]
+            "catalog": list(service.catalog.ids()),
+            "price_epoch": epoch,
+            # (config_id, $/h) pairs, not an object: JSON objects force
+            # string keys, which would corrupt non-string config ids
+            "prices": [[c, p] for c, p in prices]})]
         self._seq = 0
 
     # -- event handling ------------------------------------------------------
@@ -81,6 +91,7 @@ class SelectionDaemon:
                 self._record({
                     "kind": "tick", "seq": self._next_seq(),
                     "deltas": len(deltas),
+                    "applied": [[d.config_id, d.price] for d in deltas],
                     "price_epoch": self.service.price_epoch})
             return None
         self.stats.submissions += 1
@@ -93,8 +104,13 @@ class SelectionDaemon:
             # mismatch): journal the rejection, keep serving — any other
             # ValueError is misconfiguration and propagates
             self.stats.rejected += 1
+            klass = self.service.classify(event.job_id, event.annotation)
+            excl = self.service.effective_exclusions(event.job_id,
+                                                     event.exclude_groups)
             self._record({"kind": "rejected", "seq": self._next_seq(),
                           "job": event.job_id,
+                          "job_class": klass.value if klass else None,
+                          "exclude_groups": list(excl),
                           "price_epoch": self.service.price_epoch})
             return None
         self.stats.decisions += 1
@@ -105,6 +121,8 @@ class SelectionDaemon:
                           if decision.job_class else None),
             "config": decision.config_id,
             "hourly_cost": decision.hourly_cost,
+            "score": decision.ranking[0].score,
+            "exclude_groups": list(decision.exclude_groups),
             "from_cache": decision.from_cache,
             "price_epoch": decision.price_epoch,
         })
@@ -142,7 +160,9 @@ class SelectionDaemon:
             raise ValueError(f"not a decision journal: {header!r}")
         if header.get("version") != JOURNAL_VERSION:
             raise ValueError(
-                f"unsupported journal version {header.get('version')!r}")
+                f"unsupported journal version {header.get('version')!r} "
+                f"(current {JOURNAL_VERSION}; migration notes in "
+                f"DESIGN.md §8)")
         return header, [json.loads(ln) for ln in lines[1:]]
 
     @classmethod

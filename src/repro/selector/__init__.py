@@ -27,7 +27,8 @@ The legacy entry points (:class:`repro.core.flora.Flora`,
 package; new substrates should implement :class:`ResourceCatalog` directly.
 See DESIGN.md for the full architecture.
 """
-from repro.selector.catalog import (BaseCatalog, GcpVmCatalog, PriceTable,
+from repro.selector.catalog import (BaseCatalog, GcpVmCatalog,
+                                    IdentityCatalog, PriceTable,
                                     ResourceCatalog, TpuSliceCatalog)
 from repro.selector.rank import (NothingRankableError, RankedConfig,
                                  RankState, rank_dense, rank_pairs)
@@ -35,8 +36,8 @@ from repro.selector.store import ProfilingStore
 from repro.selector.service import Decision, SelectionService
 
 __all__ = [
-    "BaseCatalog", "Decision", "GcpVmCatalog", "NothingRankableError",
-    "PriceTable", "ProfilingStore", "RankState", "RankedConfig",
-    "ResourceCatalog", "SelectionService", "TpuSliceCatalog", "rank_dense",
-    "rank_pairs",
+    "BaseCatalog", "Decision", "GcpVmCatalog", "IdentityCatalog",
+    "NothingRankableError", "PriceTable", "ProfilingStore", "RankState",
+    "RankedConfig", "ResourceCatalog", "SelectionService", "TpuSliceCatalog",
+    "rank_dense", "rank_pairs",
 ]

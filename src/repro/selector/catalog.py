@@ -174,6 +174,18 @@ class BaseCatalog:
         raise NotImplementedError
 
 
+class IdentityCatalog(BaseCatalog):
+    """Entries are their own ids; pricing comes from the price source
+    (typically a :class:`PriceTable`).  The minimal catalog for synthetic
+    universes — benchmarks, replay harnesses, property tests."""
+
+    def entry(self, entry_id: Hashable) -> Hashable:
+        return entry_id
+
+    def describe(self, entry_id: Hashable) -> Mapping[str, float]:
+        return {}
+
+
 class GcpVmCatalog(BaseCatalog):
     """GCP VM cluster configurations (paper Table II) priced per resource."""
 

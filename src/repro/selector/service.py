@@ -44,6 +44,10 @@ class Decision:
     ranking: Tuple[RankedConfig, ...]
     from_cache: bool
     price_epoch: int
+    #: the *effective* exclusion set the ranking was computed under
+    #: (explicit argument, or the job's own group by default) — journal
+    #: consumers need it to recompute the ranking cold (DESIGN.md §8).
+    exclude_groups: Tuple[str, ...] = ()
 
 
 class SelectionService:
@@ -92,6 +96,17 @@ class SelectionService:
         self._cache.clear()
         self._states.clear()
         self._state_tags.clear()
+
+    def price_snapshot(self) -> Tuple[int, Tuple[Tuple[Hashable, float],
+                                                 ...]]:
+        """``(price_epoch, ((config_id, $/h), ...))`` in catalog order —
+        the self-contained state a journal consumer needs to reconstruct
+        this service's prices at a later time (DESIGN.md §8).  Works for
+        any price source; for a :class:`PriceTable` it is the table's
+        current quotes."""
+        prices = self.catalog.price_vector(self._price_source)
+        return self._price_epoch, tuple(
+            (c, float(p)) for c, p in zip(self.catalog.ids(), prices))
 
     def _price_tag(self) -> Tuple:
         """What cached rankings are keyed on: the epoch, plus the table
@@ -231,6 +246,22 @@ class SelectionService:
             return self.store.meta(job_id).job_class
         return None
 
+    def effective_exclusions(self, job_id: Hashable,
+                             exclude_groups: Optional[Sequence[str]] = None
+                             ) -> Tuple[str, ...]:
+        """The exclusion set a submission actually ranks under: the
+        explicit argument, else the job's own group when the job is
+        already profiled (the paper's no-recurrence discipline, §III-A).
+        Exposed so journal writers can record the effective set even for
+        submissions that never produce a Decision (rejections)."""
+        if exclude_groups is not None:
+            return tuple(exclude_groups)
+        if job_id in self.store.job_ids:
+            own = self.store.meta(job_id).group
+            if own is not None:
+                return (own,)
+        return ()
+
     def submit(self, job_id: Hashable, *,
                annotation: Optional[JobClass] = None,
                exclude_groups: Optional[Sequence[str]] = None,
@@ -238,15 +269,10 @@ class SelectionService:
         """Classify, rank under current prices, pick the argmin.
 
         ``exclude_groups`` defaults to the job's own group when the job is
-        already profiled (the paper's no-recurrence discipline, §III-A).
+        already profiled (see :meth:`effective_exclusions`).
         """
         klass = None if one_class else self.classify(job_id, annotation)
-        if exclude_groups is None:
-            exclude_groups = ()
-            if job_id in self.store.job_ids:
-                own = self.store.meta(job_id).group
-                if own is not None:
-                    exclude_groups = (own,)
+        exclude_groups = self.effective_exclusions(job_id, exclude_groups)
         ranking, from_cache = self.rank_cached(
             job_class=klass, exclude_groups=tuple(exclude_groups))
         winner = ranking[0]
@@ -263,4 +289,5 @@ class SelectionService:
             hourly_cost=self.catalog.hourly_cost(winner.config_id,
                                                  self._price_source),
             ranking=ranking, from_cache=from_cache,
-            price_epoch=self._price_epoch)
+            price_epoch=self._price_epoch,
+            exclude_groups=tuple(exclude_groups))

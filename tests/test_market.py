@@ -434,6 +434,8 @@ def test_daemon_journal_roundtrip(tmp_path):
         assert rec["hourly_cost"] == d.hourly_cost
         assert rec["price_epoch"] == d.price_epoch
         assert rec["from_cache"] == d.from_cache
+        assert rec["score"] == d.ranking[0].score
+        assert tuple(rec["exclude_groups"]) == d.exclude_groups
     seqs = [r["seq"] for r in records]
     assert seqs == sorted(seqs)
 

@@ -124,6 +124,92 @@ def test_reprice_stream_equals_cold_rank_elementwise(data):
                                              job_ids=jobs)
 
 
+@st.composite
+def event_markets(draw):
+    """A config universe plus a SimulatedSpotFeed parameterization whose
+    delta stream includes scheduled discount/eviction MarketEvents (the
+    boundary re-quote bursts the plain delta_streams strategy never
+    generates)."""
+    from repro.market.feed import DEFAULT_REGIONS, MarketEvent
+    n_cfgs = draw(st.integers(2, 5))
+    cfgs = [f"c{i}" for i in range(n_cfgs)]
+    base = {c: draw(st.floats(0.5, 20.0, allow_nan=False)) for c in cfgs}
+    n_ticks = draw(st.integers(2, 10))
+    events = [
+        MarketEvent(draw(st.sampled_from(DEFAULT_REGIONS)),
+                    start_tick=draw(st.integers(0, n_ticks - 1)),
+                    duration=draw(st.integers(1, n_ticks)),
+                    factor=draw(st.sampled_from([0.25, 0.5, 2.0, 4.0])),
+                    kind=draw(st.sampled_from(["discount", "eviction"])))
+        for _ in range(draw(st.integers(1, 3)))]
+    seed = draw(st.integers(0, 2 ** 16))
+    change_fraction = draw(st.floats(0.0, 1.0))
+    jobs = [f"j{i}" for i in range(draw(st.integers(2, 4)))]
+    rt = {(j, c): draw(st.floats(0.01, 100.0, allow_nan=False))
+          for j in jobs for c in cfgs}
+    return cfgs, base, events, seed, change_fraction, n_ticks, jobs, rt
+
+
+def _event_feed(base, events, seed, change_fraction):
+    from repro.market import SimulatedSpotFeed
+    return SimulatedSpotFeed(base, seed=seed,
+                             change_fraction=change_fraction,
+                             volatility=0.15, events=events)
+
+
+@settings(max_examples=40, deadline=None)
+@given(event_markets())
+def test_event_market_reprice_bit_identical(market):
+    """Satellite (ISSUE 3): for any simulated market *including
+    discount/eviction MarketEvents*, RankState.reprice stays bit-identical
+    to a cold rank_dense at every tick — boundary re-quote bursts (every
+    config of a region at once) included."""
+    import numpy as np
+    cfgs, base, events, seed, change_fraction, n_ticks, jobs, rt = market
+    hours = np.asarray([[rt[(j, c)] for c in cfgs] for j in jobs])
+    mask = np.ones_like(hours, dtype=bool)
+    live = np.asarray([base[c] for c in cfgs])
+    state = RankState(hours, mask, live.copy(), cfgs, job_ids=jobs)
+    feed = _event_feed(base, events, seed, change_fraction)
+    for t in range(n_ticks):
+        batch = feed.poll(t)
+        if not batch:
+            continue
+        state.reprice({d.config_id: d.price for d in batch})
+        for d in batch:
+            live[cfgs.index(d.config_id)] = d.price
+        assert state.ranking() == rank_dense(hours, mask, live, cfgs,
+                                             job_ids=jobs)
+
+
+@settings(max_examples=15, deadline=None)
+@given(event_markets(), st.integers(0, 2 ** 16))
+def test_event_market_journal_audit_passes(market, stream_seed):
+    """Satellite (ISSUE 3): a daemon serving any event-bearing market
+    yields a journal whose every decision the JournalReplayer confirms
+    bit-identical to a cold re-rank at its reconstructed epoch."""
+    from repro.core.trace import JobClass
+    from repro.market import JournalReplayer, SelectionDaemon, \
+        synthetic_stream
+    from repro.selector import (IdentityCatalog, PriceTable, ProfilingStore,
+                                SelectionService)
+    cfgs, base, events, seed, change_fraction, n_ticks, _, _ = market
+    store = ProfilingStore(config_ids=cfgs)
+    for j in range(4):
+        for i, c in enumerate(cfgs):
+            store.add(f"j{j}", c, 0.1 + ((j * 7 + i * 3) % 11) / 5.0,
+                      job_class=JobClass.A if j % 2 else JobClass.B)
+    svc = SelectionService(IdentityCatalog(cfgs), store, PriceTable(base))
+    daemon = SelectionDaemon(svc, _event_feed(base, events, seed,
+                                              change_fraction))
+    daemon.run(synthetic_stream(store.job_ids, 30, seed=stream_seed,
+                                tick_fraction=0.4))
+    audit = JournalReplayer(store, daemon.journal_dump()).audit()
+    assert audit.ok, audit.mismatches[:3]
+    assert audit.decisions == daemon.stats.decisions
+    assert audit.ticks == daemon.stats.epochs
+
+
 @settings(max_examples=25, deadline=None)
 @given(runtime_tables())
 def test_rank_dense_equals_pairs(table):

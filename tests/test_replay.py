@@ -1,0 +1,538 @@
+"""Tests for the replay harness (repro.market.replay + dynamic evaluation).
+
+Covers the ISSUE 3 acceptance surface: recorded-feed CSV round-trips and
+malformed-input handling, the v2 decision-journal schema (golden file),
+JournalReplayer's bit-identical audit (including tamper detection and the
+out-of-band-mutation case it exists to catch), and the
+deviation-from-optimal report under dynamic prices.
+
+Regenerate the golden journal after a *deliberate* schema change with
+
+    PYTHONPATH=src python tests/test_replay.py --regen-golden
+
+and add a migration note to DESIGN.md §8 in the same commit.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import TpuPriceModel
+from repro.core.evaluate import dynamic_evaluation
+from repro.core.tpu_flora import MeshOption, WorkloadRecord, make_service
+from repro.core.trace import JobClass
+from repro.market import (JournalReplayer, MarketEvent, PriceFeed,
+                          RecordedPriceFeed, SelectionDaemon,
+                          SimulatedSpotFeed, Submission, Tick, record_feed)
+from repro.market.daemon import JOURNAL_VERSION
+from repro.selector import (IdentityCatalog, PriceTable, ProfilingStore,
+                            SelectionService)
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures")
+GOLDEN_JOURNAL = os.path.join(FIXTURES, "decision_journal_v2.golden.jsonl")
+PRICE_FIXTURE = os.path.join(os.path.dirname(FIXTURES), "..", "examples",
+                             "data", "gcp_spot_prices.csv")
+
+
+# --- shared universes -------------------------------------------------------------
+
+MESH_OPTIONS = [
+    MeshOption("dp256xtp1", "v5e", 256, (256, 1), ("data", "model")),
+    MeshOption("dp16xtp16", "v5e", 256, (16, 16), ("data", "model")),
+    MeshOption("v5p-dp16xtp16", "v5p", 256, (16, 16), ("data", "model")),
+]
+SPEED = {"dp256xtp1": {"train_4k": 1.0, "decode_32k": 4.0},
+         "dp16xtp16": {"train_4k": 1.5, "decode_32k": 1.0},
+         "v5p-dp16xtp16": {"train_4k": 0.8, "decode_32k": 0.55}}
+
+
+def live_service() -> SelectionService:
+    recs = [WorkloadRecord(arch=a, shape=s, mesh=m, step_seconds=v)
+            for a in ("a1", "a2")
+            for m, shapes in SPEED.items() for s, v in shapes.items()]
+    svc = make_service(MESH_OPTIONS, recs, TpuPriceModel("ondemand"))
+    svc.set_price_source(PriceTable.from_catalog(svc.catalog,
+                                                 TpuPriceModel("ondemand")))
+    return svc
+
+
+def synth_service(n_jobs=6, n_cfgs=12, seed=0) -> SelectionService:
+    """Identity-catalog universe with correlated per-class runtimes."""
+    rng = np.random.default_rng(seed)
+    ids = [f"c{i}" for i in range(n_cfgs)]
+    speed = {JobClass.A: rng.uniform(0.5, 3.0, n_cfgs),
+             JobClass.B: rng.uniform(0.5, 3.0, n_cfgs)}
+    store = ProfilingStore(config_ids=ids)
+    for j in range(n_jobs):
+        klass = JobClass.A if j % 2 else JobClass.B
+        scale = rng.uniform(0.2, 2.0)
+        for c in range(n_cfgs):
+            store.add(f"j{j}", ids[c],
+                      float(scale * speed[klass][c]
+                            * rng.lognormal(0.0, 0.05)),
+                      job_class=klass, group=None)
+    table = PriceTable({c: float(rng.uniform(1.0, 20.0)) for c in ids})
+    return SelectionService(IdentityCatalog(ids), store, table)
+
+
+# --- recorded feed: round-trip ----------------------------------------------------
+
+def sim_feed(seed=5, **kw):
+    base = {"a": 2.0, "b": 5.5, "c": 0.75, 7: 12.0}   # int id round-trips too
+    kw.setdefault("change_fraction", 0.5)
+    return SimulatedSpotFeed(base, seed=seed, **kw)
+
+
+def test_record_feed_roundtrip_identical_stream():
+    """record_feed(sim) -> RecordedPriceFeed reproduces the identical tick
+    stream: prices (exact floats), ordering, id types, event boundaries."""
+    events = [MarketEvent("us-central1", 3, 4, factor=0.5, kind="discount"),
+              MarketEvent("europe-west3", 8, 2, factor=3.0,
+                          kind="eviction")]
+    text = record_feed(sim_feed(events=events), 15)
+    replay = RecordedPriceFeed.loads(text)
+    assert isinstance(replay, PriceFeed)
+    assert replay.ticks == 15
+    fresh = sim_feed(events=events)
+    for t in range(15):
+        assert replay.poll(t) == fresh.poll(t)
+    # ids keep their types through the JSON encoding
+    assert {type(c) for c in replay.config_ids()} <= {str, int}
+    assert any(isinstance(c, int) for c in replay.config_ids())
+
+
+def test_record_feed_rerecord_is_byte_identical():
+    text = record_feed(sim_feed(), 12)
+    again = record_feed(RecordedPriceFeed.loads(text), 12)
+    assert again == text
+
+
+def test_record_feed_mid_stream_start_stays_loadable():
+    """Regression: the ticks= header records the horizon (last tick + 1),
+    so a recording that starts mid-stream loads and replays at its
+    absolute tick indices."""
+    source = sim_feed()
+    for t in range(5):
+        source.poll(t)                        # advance past the prefix
+    tail = record_feed(source, 5, start=5)        # ticks 5-9
+    feed = RecordedPriceFeed.loads(tail)
+    assert feed.ticks == 10
+    assert feed.poll(0) == () and feed.poll(4) == ()
+    fresh = sim_feed()
+    for t in range(5):
+        fresh.poll(t)
+    for t in range(5, 10):
+        assert feed.poll(t) == fresh.poll(t)
+    # re-recording over the full horizon reproduces the bytes (the
+    # leading quiet ticks emit no rows)
+    assert record_feed(feed, 10) == tail
+
+
+def test_recorded_feed_quiet_past_the_recording():
+    feed = RecordedPriceFeed.loads(record_feed(sim_feed(), 5))
+    assert feed.poll(5) == () and feed.poll(999) == ()
+    assert len(list(feed.stream())) == 5
+
+
+def test_recorded_feed_drives_daemon_deterministically():
+    """The same recording yields byte-identical journals — the
+    reproducible-fixture contract that motivates recording at all."""
+    from repro.market import synthetic_stream
+    text = record_feed(SimulatedSpotFeed(
+        {c: 10.0 + i for i, c in
+         enumerate(f"c{i}" for i in range(12))}, seed=3,
+        change_fraction=0.4), 20)
+
+    def run():
+        svc = synth_service()
+        daemon = SelectionDaemon(svc, RecordedPriceFeed.loads(text))
+        daemon.run(synthetic_stream([f"j{i}" for i in range(6)], 120,
+                                    seed=1, tick_fraction=0.2))
+        return daemon.journal_dump()
+
+    assert run() == run()
+
+
+# --- recorded feed: malformed input -----------------------------------------------
+
+def good_csv():
+    return record_feed(sim_feed(), 4)
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda t: t.replace("# repro.market.recorded-price-feed",
+                         "# something-else"), "not a recorded price feed"),
+    (lambda t: t.replace(" v1 ", " v9 "), "version"),
+    (lambda t: "\n".join(["no magic"] + t.splitlines()[1:]),
+     "not a recorded price feed"),
+    (lambda t: t.replace("tick,config_id,price", "a,b,c"),
+     "expected header"),
+])
+def test_malformed_feed_headers_raise(mutate, match):
+    with pytest.raises(ValueError, match=match):
+        RecordedPriceFeed.loads(mutate(good_csv()))
+
+
+def row(csv_row: str) -> str:
+    head = good_csv().splitlines()[:2]
+    return "\n".join(head + [csv_row]) + "\n"
+
+
+@pytest.mark.parametrize("bad,match", [
+    ('0,7', "expected 3 fields"),
+    ('0,7,1.0,extra', "expected 3 fields"),
+    ('x,7,1.0', "not an integer"),
+    ('-1,7,1.0', "negative tick"),
+    ('0,7,zzz', "not a number"),
+    ('0,7,-3.0', "non-positive"),
+    ('0,7,0.0', "non-positive"),
+    ('0,7,inf', "non-finite"),
+    ('0,not-json,1.0', "not valid JSON"),
+    ('0,"[1, 2]",1.0', "not hashable"),
+])
+def test_malformed_feed_rows_raise_with_line_numbers(bad, match):
+    """A malformed row must raise, naming its line — never silently skip."""
+    with pytest.raises(ValueError, match=match) as e:
+        RecordedPriceFeed.loads(row(bad))
+    assert "line 3" in str(e.value)
+
+
+def test_out_of_order_ticks_raise():
+    head = good_csv().splitlines()[:2]
+    text = "\n".join(head + ["5,7,1.0", "2,7,2.0"]) + "\n"
+    with pytest.raises(ValueError, match="out of order"):
+        RecordedPriceFeed.loads(text)
+
+
+# --- journal schema v2: golden file -----------------------------------------------
+
+def golden_daemon() -> SelectionDaemon:
+    svc = live_service()
+    feed = SimulatedSpotFeed(dict(svc.price_source.items()), seed=6,
+                             change_fraction=0.6)
+    return SelectionDaemon(svc, feed)
+
+
+GOLDEN_STREAM = [
+    Submission("decode_32k"), Tick(), Submission("train_4k"), Tick(),
+    Submission("decode_32k"),
+    Submission("decode_32k", exclude_groups=("a1", "a2")),   # rejection
+    Tick(), Submission("train_4k"),
+]
+
+
+def test_journal_schema_golden_file():
+    """Pins the versioned-JSONL journal layout byte-for-byte.  If this
+    fails you changed the journal schema: bump JOURNAL_VERSION, add a
+    migration note to DESIGN.md §8, and regenerate the golden with
+    ``PYTHONPATH=src python tests/test_replay.py --regen-golden`` — all
+    in the same commit."""
+    daemon = golden_daemon()
+    daemon.run(GOLDEN_STREAM)
+    with open(GOLDEN_JOURNAL) as f:
+        assert daemon.journal_dump() == f.read()
+
+
+def test_journal_v2_is_self_contained():
+    daemon = golden_daemon()
+    daemon.run(GOLDEN_STREAM)
+    header, records = SelectionDaemon.loads_journal(daemon.journal_dump())
+    assert header["version"] == JOURNAL_VERSION == 2
+    assert [c for c, _ in header["prices"]] == header["catalog"]
+    assert all(p > 0 for _, p in header["prices"])
+    for rec in records:
+        if rec["kind"] == "tick":
+            assert len(rec["applied"]) == rec["deltas"] > 0
+        elif rec["kind"] == "decision":
+            assert rec["score"] > 0
+            assert isinstance(rec["exclude_groups"], list)
+        elif rec["kind"] == "rejected":
+            assert rec["job_class"] in ("A", "B", None)
+            assert isinstance(rec["exclude_groups"], list)
+
+
+def test_v1_journals_rejected_with_migration_pointer():
+    old = json.dumps({"format": "repro.market.decision-journal",
+                      "version": 1, "catalog": []})
+    with pytest.raises(ValueError, match="DESIGN.md"):
+        SelectionDaemon.loads_journal(old + "\n")
+
+
+# --- JournalReplayer: the consistency audit ---------------------------------------
+
+def run_daemon(svc=None, n_events=200, seed=2, change_fraction=0.3,
+               events=()):
+    svc = svc or synth_service()
+    feed = SimulatedSpotFeed(dict(svc.price_source.items()), seed=seed,
+                             change_fraction=change_fraction,
+                             events=list(events))
+    daemon = SelectionDaemon(svc, feed)
+    from repro.market import synthetic_stream
+    daemon.run(synthetic_stream(svc.store.job_ids, n_events, seed=seed,
+                                tick_fraction=0.25))
+    return daemon
+
+
+def test_audit_passes_on_clean_run():
+    daemon = run_daemon(events=[MarketEvent("us-central1", 2, 5, 0.5),
+                                MarketEvent("asia-east1", 10, 4, 2.0,
+                                            "eviction")])
+    audit = JournalReplayer(daemon.service.store,
+                            daemon.journal_dump()).audit()
+    assert audit.ok
+    assert audit.decisions == daemon.stats.decisions > 0
+    assert audit.ticks == daemon.stats.epochs > 0
+    assert audit.rejected == daemon.stats.rejected
+
+
+def test_audit_detects_tampered_selection():
+    daemon = run_daemon()
+    header, records = SelectionDaemon.loads_journal(daemon.journal_dump())
+    victim = next(r for r in records if r["kind"] == "decision")
+    other = next(c for c in header["catalog"] if c != victim["config"])
+    victim["config"] = other
+    audit = JournalReplayer(daemon.service.store, (header, records)).audit()
+    assert not audit.ok
+    fields = {m.field for m in audit.mismatches}
+    assert "config" in fields
+    assert all(m.seq == victim["seq"] for m in audit.mismatches)
+
+
+def test_audit_detects_single_ulp_score_drift():
+    daemon = run_daemon()
+    header, records = SelectionDaemon.loads_journal(daemon.journal_dump())
+    victim = next(r for r in records if r["kind"] == "decision")
+    victim["score"] = np.nextafter(victim["score"], np.inf)
+    audit = JournalReplayer(daemon.service.store, (header, records)).audit()
+    assert [m.field for m in audit.mismatches] == ["score"]
+
+
+def test_audit_detects_dropped_tick_deltas():
+    """Drop, from a tick record, the re-quote of a config that a later
+    decision selected: the reconstructed quote then disagrees with the
+    journaled $/h (the feed only emits *changed* prices, so the removed
+    delta necessarily differs from the price before it)."""
+    daemon = run_daemon()
+    header, records = SelectionDaemon.loads_journal(daemon.journal_dump())
+    tampered = False
+    for i, rec in enumerate(records):
+        if tampered or rec["kind"] != "decision":
+            continue
+        for tick in reversed(records[:i]):      # latest tick before it
+            if tick["kind"] == "tick" and any(
+                    c == rec["config"] for c, _ in tick["applied"]):
+                tick["applied"] = [(c, p) for c, p in tick["applied"]
+                                   if c != rec["config"]]
+                tampered = True
+                break
+    assert tampered, "stream never repriced a selected config"
+    audit = JournalReplayer(daemon.service.store, (header, records)).audit()
+    assert not audit.ok
+
+
+def test_audit_catches_out_of_band_price_mutation():
+    """The audit's raison d'etre: a price applied to the table *behind
+    the journal's back* makes later journaled decisions unexplainable
+    from the journal alone — the replay must flag them, not absorb
+    them."""
+    svc = synth_service()
+    feed = SimulatedSpotFeed(dict(svc.price_source.items()), seed=4,
+                             change_fraction=0.5)
+    daemon = SelectionDaemon(svc, feed)
+    daemon.handle(Submission("j1"))
+    daemon.handle(Tick())
+    svc.price_source.apply({"c0": 0.0001})        # out-of-band, unjournaled
+    daemon.handle(Submission("j1"))               # decided at secret prices
+    audit = JournalReplayer(svc.store, daemon.journal_dump()).audit()
+    assert not audit.ok
+
+
+def test_audit_flags_spurious_rejections():
+    """A journaled rejection for a (class, exclusions) that cold-ranks to
+    a valid winner means the daemon silently served nothing for a
+    rankable job — the audit must flag it, not count it as routine."""
+    daemon = run_daemon()
+    header, records = SelectionDaemon.loads_journal(daemon.journal_dump())
+    victim = next(r for r in records if r["kind"] == "decision")
+    fake = {"kind": "rejected", "seq": victim["seq"], "job": victim["job"],
+            "job_class": victim["job_class"],
+            "exclude_groups": victim["exclude_groups"],
+            "price_epoch": victim["price_epoch"]}
+    records[records.index(victim)] = fake
+    audit = JournalReplayer(daemon.service.store, (header, records)).audit()
+    assert not audit.ok
+    assert any(m.field == "rejected" for m in audit.mismatches)
+    # a genuine rejection (exclusions empty the class) still audits clean
+    svc = live_service()
+    feed = SimulatedSpotFeed(dict(svc.price_source.items()), seed=1,
+                             change_fraction=0.3)
+    d2 = SelectionDaemon(svc, feed)
+    d2.handle(Submission("decode_32k", exclude_groups=("a1", "a2")))
+    d2.handle(Submission("decode_32k"))
+    audit2 = JournalReplayer(svc.store, d2.journal_dump()).audit()
+    assert audit2.ok and audit2.rejected == 1 and audit2.decisions == 1
+
+
+def test_record_feed_rejects_unloadable_quotes_at_capture_time():
+    """A feed emitting a non-finite quote must fail the capture, not
+    produce a CSV that every later load rejects."""
+    class BadFeed:
+        def poll(self, tick):
+            from repro.market import PriceDelta
+            return (PriceDelta("a", float("inf")),)
+
+    with pytest.raises(ValueError, match="non-finite"):
+        record_feed(BadFeed(), 1)
+    from repro.market import PriceDelta
+    with pytest.raises(ValueError, match="non-finite"):
+        RecordedPriceFeed({0: [PriceDelta("a", float("nan"))]})
+
+
+def test_audit_catches_drifted_trace():
+    daemon = run_daemon()
+    store = daemon.service.store
+    # post-hoc re-profile: c0 becomes j0's runaway best, renormalizing
+    # every class-B score the journaled decisions were computed from
+    store.add("j0", "c0", 1e-6, job_class=JobClass.B)
+    audit = JournalReplayer(store, daemon.journal_dump()).audit()
+    assert not audit.ok
+
+
+def test_replayer_requires_self_contained_journal():
+    with pytest.raises(ValueError, match="price snapshot"):
+        JournalReplayer(ProfilingStore(), ({"catalog": []}, []))
+
+
+def test_replayed_decisions_reconstruct_epochs():
+    daemon = run_daemon()
+    replayer = JournalReplayer(daemon.service.store, daemon.journal_dump())
+    decisions = replayer.decisions()
+    assert len(decisions) == daemon.stats.decisions
+    epochs = [d.price_epoch for d in decisions]
+    assert epochs == sorted(epochs)
+    # the last decision's reconstructed prices equal the live table
+    final = decisions[-1].prices
+    for c in daemon.service.catalog.ids():
+        assert final[c] == daemon.service.price_source[c]
+
+
+# --- dynamic evaluation -----------------------------------------------------------
+
+class _D:
+    """Duck-typed ReplayedDecision for hand-built evaluation checks."""
+
+    def __init__(self, seq, job_id, config_id, prices, price_epoch=0,
+                 job_class=None):
+        self.seq, self.job_id, self.config_id = seq, job_id, config_id
+        self.prices, self.price_epoch = prices, price_epoch
+        self.job_class = job_class
+
+
+def test_dynamic_evaluation_hand_computed():
+    store = ProfilingStore(config_ids=["x", "y"])
+    store.add("j", "x", 1.0)                     # 1 h on x
+    store.add("j", "y", 3.0)                     # 3 h on y
+    base = {"x": 10.0, "y": 2.0}                 # static oracle: y (6 < 10)
+    moved = {"x": 4.0, "y": 2.0}                 # epoch oracle: x (4 < 6)
+    ev = dynamic_evaluation(store, [_D(1, "j", "x", moved)], ["x", "y"],
+                            base)
+    (o,) = ev.outcomes
+    assert o.realized_cost == 4.0
+    assert o.oracle_config == "x" and o.oracle_cost == 4.0
+    assert o.static_config == "y" and o.static_cost == 6.0
+    assert o.deviation == 0.0
+    assert o.static_deviation == pytest.approx(0.5)
+    assert ev.mean_deviation == 0.0
+    assert ev.static_mean_deviation == pytest.approx(0.5)
+    assert ev.summary()["decisions"] == 1
+
+
+def test_dynamic_evaluation_skips_unprofiled_selections():
+    store = ProfilingStore(config_ids=["x", "y"])
+    store.add("j", "x", 1.0)                     # y never profiled for j
+    ev = dynamic_evaluation(
+        store, [_D(1, "j", "y", {"x": 1.0, "y": 1.0})], ["x", "y"],
+        {"x": 1.0, "y": 1.0})
+    assert ev.outcomes == () and ev.skipped == 1
+
+
+def test_dynamic_evaluation_skips_never_profiled_jobs():
+    """Regression: a journaled decision for a job the store has never
+    seen (the selector's green-field use case — ranked purely from
+    class-mates) must count as skipped, not KeyError."""
+    store = ProfilingStore(config_ids=["x"])
+    store.add("j", "x", 1.0)
+    ev = dynamic_evaluation(
+        store, [_D(1, "ghost-job", "x", {"x": 1.0})], ["x"], {"x": 1.0})
+    assert ev.outcomes == () and ev.skipped == 1
+
+
+def test_evaluate_handles_green_field_submissions_end_to_end():
+    """Same regression through the real pipeline: a daemon serving a
+    submission that is not a profiled job (classified by annotation)
+    journals a decision; audit passes and evaluate skips it."""
+    svc = synth_service()
+    feed = SimulatedSpotFeed(dict(svc.price_source.items()), seed=9,
+                             change_fraction=0.5)
+    daemon = SelectionDaemon(svc, feed)
+    daemon.handle(Submission("never-profiled", annotation=JobClass.A))
+    daemon.handle(Tick())
+    daemon.handle(Submission("j1"))
+    replayer = JournalReplayer(svc.store, daemon.journal_dump())
+    assert replayer.audit().ok
+    ev = replayer.evaluate()
+    assert ev.skipped == 1 and len(ev.outcomes) == 1
+
+
+def test_deviation_never_negative():
+    daemon = run_daemon(n_events=300)
+    ev = JournalReplayer(daemon.service.store,
+                         daemon.journal_dump()).evaluate()
+    assert ev.outcomes
+    for o in ev.outcomes:
+        assert o.deviation >= 0.0 and o.static_deviation >= 0.0
+    assert ev.max_deviation >= ev.mean_deviation >= 0.0
+
+
+# --- the bundled fixture (acceptance + CI smoke) ----------------------------------
+
+def test_bundled_fixture_replay_end_to_end():
+    """ISSUE 3 acceptance: on the bundled recorded-price fixture, the
+    journal audit confirms every decision bit-identical to a cold re-rank
+    at its epoch, and the harness reports deviation-from-optimal under
+    dynamic prices (with live repricing beating the static-price
+    oracle)."""
+    from repro.core import costmodel, spark_sim
+    from repro.market import synthetic_stream
+    from repro.selector import GcpVmCatalog
+    trace = spark_sim.generate_trace(seed=0)
+    store = ProfilingStore.from_trace(trace)
+    catalog = GcpVmCatalog(trace.configs, costmodel.LinearPriceModel())
+    svc = SelectionService(catalog, store, PriceTable.from_catalog(catalog))
+    feed = RecordedPriceFeed.load(PRICE_FIXTURE)
+    assert feed.ticks == 40
+    daemon = SelectionDaemon(svc, feed)
+    daemon.run(synthetic_stream([j.name for j in trace.jobs], 400, seed=3,
+                                tick_fraction=0.15))
+    replayer = JournalReplayer(store, daemon.journal_dump())
+    audit = replayer.audit()
+    assert audit.ok, audit.mismatches[:3]
+    assert audit.decisions > 100 and audit.ticks > 10
+    ev = replayer.evaluate()
+    assert 0.0 <= ev.mean_deviation < 0.25
+    assert ev.mean_deviation < ev.static_mean_deviation
+    assert ev.skipped == 0
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen-golden" in sys.argv:
+        daemon = golden_daemon()
+        daemon.run(GOLDEN_STREAM)
+        with open(GOLDEN_JOURNAL, "w") as f:
+            f.write(daemon.journal_dump())
+        print(f"wrote {GOLDEN_JOURNAL}")
+    else:
+        print(__doc__)
