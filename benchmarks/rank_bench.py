@@ -14,7 +14,7 @@ from typing import Callable, Dict, Hashable, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
-from repro.selector import rank_dense, rank_pairs
+from repro.selector import BackendUnavailableError, rank_dense, rank_pairs
 
 
 def rank_dict_loop(
@@ -65,7 +65,7 @@ def compare(n_jobs: int, n_cfgs: int, repeat: int = 20) -> Dict[str, float]:
     try:
         us_jax = _timed(lambda: rank_dense(hours, mask, prices, cfgs,
                                            backend="jax"), repeat)
-    except RuntimeError:
+    except BackendUnavailableError:
         us_jax = float("nan")
     # sanity: identical winner and ordering
     base = [c for c, _ in rank_dict_loop(pairs, jobs, cfgs, price_of)]

@@ -20,7 +20,7 @@ from repro.market import (MarketEvent, SelectionDaemon, SimulatedSpotFeed,
 from repro.selector import PriceTable
 
 
-def build_service():
+def build_service(backend=None):
     options = [
         MeshOption("v5e-dp256xtp1", "v5e", 256, (256, 1), ("data", "model")),
         MeshOption("v5e-dp16xtp16", "v5e", 256, (16, 16), ("data", "model")),
@@ -35,7 +35,8 @@ def build_service():
                for a in ("lm-7b", "moe-30b")
                for m, shapes in speed.items()
                for s, v in shapes.items()]
-    service = make_service(options, records, TpuPriceModel("spot"))
+    service = make_service(options, records, TpuPriceModel("spot"),
+                           backend=backend)
     # swap the model source for a live quote table (same starting prices)
     service.set_price_source(PriceTable.from_catalog(
         service.catalog, TpuPriceModel("spot")))
@@ -46,9 +47,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--events", type=int, default=400)
     ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--backend", default=None, choices=["numpy", "jax"],
+                    help="ranking backend (default: FLORA_RANK_BACKEND "
+                         "env var, else numpy)")
     args = ap.parse_args()
 
-    service = build_service()
+    service = build_service(backend=args.backend)
     feed = SimulatedSpotFeed(
         dict(service.price_source.items()), seed=args.seed,
         change_fraction=0.08, volatility=0.10,

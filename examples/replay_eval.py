@@ -50,13 +50,14 @@ FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data",
                        "gcp_spot_prices.csv")
 
 
-def build_service():
+def build_service(backend=None):
     """The paper universe (Tables I x II) behind a live price table."""
     trace = spark_sim.generate_trace(seed=0)
     store = ProfilingStore.from_trace(trace)
     catalog = GcpVmCatalog(trace.configs, costmodel.LinearPriceModel())
     service = SelectionService(catalog, store,
-                               PriceTable.from_catalog(catalog))
+                               PriceTable.from_catalog(catalog),
+                               backend=backend)
     return trace, service
 
 
@@ -81,9 +82,14 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--record", action="store_true",
                     help="regenerate the bundled fixture and exit")
+    ap.add_argument("--backend", default=None, choices=["numpy", "jax"],
+                    help="ranking backend (default: FLORA_RANK_BACKEND "
+                         "env var, else numpy); jax serves the "
+                         "accelerator-resident float32 path and the "
+                         "audit runs in tolerance mode (DESIGN.md §9)")
     args = ap.parse_args()
 
-    trace, service = build_service()
+    trace, service = build_service(backend=args.backend)
     if args.record:
         record_fixture(service, args.prices)
         return 0
@@ -101,9 +107,18 @@ def main() -> int:
 
     replayer = JournalReplayer(service.store, daemon.journal_dump())
     audit = replayer.audit()
-    print(f"\njournal audit: {audit.decisions} decisions re-ranked cold at "
+    mode = "bit-identical" if audit.contract.bit_identical else \
+        "within tolerance"
+    print(f"\njournal audit ({replayer.backend} backend, "
+          f"{'exact' if audit.contract.bit_identical else 'tolerance'} "
+          f"mode): {audit.decisions} decisions re-ranked cold at "
           f"{audit.ticks} reconstructed epochs -> "
-          f"{'all bit-identical' if audit.ok else 'MISMATCH'}")
+          f"{f'all {mode}' if audit.ok else 'MISMATCH'}")
+    if audit.drift:
+        scores = sum(1 for d in audit.drift if d.field == "score-drift")
+        ties = sum(1 for d in audit.drift if d.field == "winner-tie")
+        print(f"  float32 drift surfaced (within contract): "
+              f"{scores} score drifts, {ties} near-tie winner swaps")
     if not audit.ok:
         for m in audit.mismatches[:5]:
             print(f"  seq {m.seq} job {m.job_id}: {m.field} journaled "

@@ -206,6 +206,11 @@ class DynamicEvaluation:
     #: realized cost is unknowable from the trace, so they are excluded
     #: from the means but never silently dropped.
     skipped: int
+    #: ranking backend that produced the judged decisions ("numpy" |
+    #: "jax") — consumers of the report need to know which
+    #: :class:`repro.selector.ScoreContract` the journal was audited
+    #: under before trusting per-decision scores (DESIGN.md §9).
+    backend: str = "numpy"
 
     def _mean(self, values: Sequence[float]) -> float:
         return sum(values) / len(values) if values else math.nan
@@ -237,6 +242,7 @@ class DynamicEvaluation:
     def summary(self) -> Dict[str, float]:
         """The machine-readable report (``BENCH_replay.json`` payload)."""
         return {
+            "backend": self.backend,
             "decisions": len(self.outcomes),
             "skipped": self.skipped,
             "epochs": len({o.price_epoch for o in self.outcomes}),
@@ -251,7 +257,8 @@ class DynamicEvaluation:
 
 def dynamic_evaluation(store: ProfilingStore, decisions: Sequence,
                        config_ids: Sequence,
-                       base_prices: Mapping) -> DynamicEvaluation:
+                       base_prices: Mapping,
+                       backend: str = "numpy") -> DynamicEvaluation:
     """Judge replayed decisions against per-epoch and static oracles.
 
     ``decisions`` are duck-typed (``repro.market.replay.ReplayedDecision``
@@ -261,6 +268,12 @@ def dynamic_evaluation(store: ProfilingStore, decisions: Sequence,
     the deviation measures distance from the true optimum, exactly like
     the paper's static-price evaluation (the selector itself never saw
     its own group's data; the judge may).
+
+    The oracles themselves always run in float64 on the host (they are
+    per-decision argmins over a C-vector — there is nothing to
+    accelerate); ``backend`` stamps which ranking backend *produced* the
+    judged decisions, so the report is self-describing about the
+    :class:`repro.selector.ScoreContract` its journal was audited under.
     """
     config_ids = list(config_ids)
     base_vec = np.asarray([base_prices[c] for c in config_ids],
@@ -307,7 +320,8 @@ def dynamic_evaluation(store: ProfilingStore, decisions: Sequence,
             oracle_cost=float(cost[oracle_idx]),
             static_config=config_ids[static_idx],
             static_cost=float(cost[static_idx])))
-    return DynamicEvaluation(outcomes=tuple(outcomes), skipped=skipped)
+    return DynamicEvaluation(outcomes=tuple(outcomes), skipped=skipped,
+                             backend=backend)
 
 
 def crossover_fraction(trace: Trace, price: costmodel.LinearPriceModel,

@@ -52,9 +52,12 @@ class Flora:
         self.trace = trace
         self.price = price
         self.one_class = one_class
+        # the paper-table reproduction is definitionally the float64
+        # bit-stable contract (legacy dict-loop parity at 1e-12), so the
+        # adapter pins numpy regardless of FLORA_RANK_BACKEND
         self.service = SelectionService(
             GcpVmCatalog(trace.configs, price),
-            ProfilingStore.from_trace(trace), price)
+            ProfilingStore.from_trace(trace), price, backend="numpy")
 
     # -- Step 2: ranking ------------------------------------------------------
     def rank(self, annotated_class: JobClass,

@@ -86,13 +86,18 @@ class WorkloadRecord:
 
 def make_service(options: Sequence[MeshOption],
                  records: Sequence[WorkloadRecord],
-                 price: TpuPriceModel) -> SelectionService:
-    """Wire catalog + store + price into a TPU-side selection service."""
+                 price: TpuPriceModel,
+                 backend: Optional[str] = None) -> SelectionService:
+    """Wire catalog + store + price into a TPU-side selection service.
+
+    ``backend`` selects the ranking backend (``None`` resolves via
+    :func:`repro.selector.default_backend`)."""
     return SelectionService(
         TpuSliceCatalog(options, price),
         ProfilingStore.from_workload_records(
             records, config_ids=[o.name for o in options]),
-        price, classifier=lambda shape: classify_workload(str(shape)))
+        price, classifier=lambda shape: classify_workload(str(shape)),
+        backend=backend)
 
 
 class TpuFlora:
@@ -106,7 +111,10 @@ class TpuFlora:
         self.price = price
         self.one_class = one_class
         self._by_name = {o.name: o for o in self.options}
-        self.service = make_service(self.options, self.records, price)
+        # paper-faithful adapter: pinned to the float64 bit-stable
+        # backend (legacy-loop parity), like repro.core.flora.Flora
+        self.service = make_service(self.options, self.records, price,
+                                    backend="numpy")
 
     def rank(self, job_class: JobClass,
              exclude_archs: Sequence[str] = ()) -> List[RankedConfig]:

@@ -27,8 +27,12 @@ JOURNAL_FORMAT = "repro.market.decision-journal"
 #: v2 makes the journal *self-contained* for replay (DESIGN.md §8): the
 #: header snapshots the starting prices and price epoch, tick records
 #: carry the applied deltas, decision records carry the winner's score
-#: and the effective exclusion set.  Every version bump MUST add a
-#: migration note to the table in DESIGN.md §8.
+#: and the effective exclusion set.  Within v2, the header also stamps
+#: the service's ranking ``backend`` — replays pick their audit mode
+#: from it (numpy: bit-identical; jax: the tolerance contract,
+#: DESIGN.md §9); journals written before the stamp read as numpy.
+#: Every version bump MUST add a migration note to the table in
+#: DESIGN.md §8.
 JOURNAL_VERSION = 2
 
 
@@ -70,6 +74,7 @@ class SelectionDaemon:
         epoch, prices = service.price_snapshot()
         self._journal: List[str] = [json.dumps({
             "format": JOURNAL_FORMAT, "version": JOURNAL_VERSION,
+            "backend": service.backend,
             "catalog": list(service.catalog.ids()),
             "price_epoch": epoch,
             # (config_id, $/h) pairs, not an object: JSON objects force

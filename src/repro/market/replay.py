@@ -15,9 +15,13 @@ PR 2 built the live market; this module closes its loop.  Three pieces:
   * :class:`JournalReplayer` — re-read a version-2 decision journal (the
     header snapshots the starting prices; tick records carry the applied
     deltas), reconstruct the price epoch at every decision, and
-    :meth:`~JournalReplayer.audit` that each journaled selection is
-    **bit-identical** to a cold :func:`~repro.selector.rank_dense` at
-    that epoch — an end-to-end consistency check of the whole
+    :meth:`~JournalReplayer.audit` each journaled selection against a
+    cold :func:`~repro.selector.rank_dense` at that epoch, under the
+    :class:`~repro.selector.ScoreContract` of the backend stamped in
+    the header — **bit-identical** for numpy journals, tolerance mode
+    (same winner or contract-tied, scores in envelope, float32 drift
+    surfaced in :attr:`ReplayAudit.drift`) for jax journals
+    (DESIGN.md §9) — an end-to-end consistency check of the whole
     feed → ticker → incremental-reprice → cache → decision path.
     :meth:`~JournalReplayer.evaluate` then scores the history against
     per-epoch and static-price oracles
@@ -50,7 +54,8 @@ import numpy as np
 from repro.core.trace import JobClass
 from repro.market.daemon import SelectionDaemon
 from repro.market.feed import PriceDelta, PriceFeed
-from repro.selector import NothingRankableError, ProfilingStore, rank_dense
+from repro.selector import (NothingRankableError, ProfilingStore,
+                            ScoreContract, rank_dense, score_contract)
 
 FEED_FORMAT = "repro.market.recorded-price-feed"
 FEED_VERSION = 1
@@ -84,8 +89,13 @@ class RecordedPriceFeed:
         for t, batch in batches.items():
             if not (isinstance(t, int) and t >= 0):
                 raise ValueError(f"bad tick index {t!r}")
+            seen = set()
             for d in batch:
                 _check_price(d, t)
+                if d.config_id in seen:
+                    raise ValueError(f"duplicate quote for "
+                                     f"{d.config_id!r} at tick {t}")
+                seen.add(d.config_id)
             self._batches[t] = tuple(batch)
         last = max(self._batches) + 1 if self._batches else 0
         #: recorded horizon: polls at ``tick >= ticks`` are beyond the
@@ -118,7 +128,11 @@ class RecordedPriceFeed:
     @classmethod
     def loads(cls, text: str) -> "RecordedPriceFeed":
         lines = text.splitlines()
-        if not lines or not lines[0].startswith("#"):
+        if not lines:
+            raise ValueError(
+                "line 1: empty recorded price feed (expected the "
+                f"'# {FEED_FORMAT} v{FEED_VERSION}' magic line)")
+        if not lines[0].startswith("#"):
             raise ValueError(
                 f"not a recorded price feed (missing '# {FEED_FORMAT} "
                 f"v{FEED_VERSION}' magic line)")
@@ -182,7 +196,15 @@ class RecordedPriceFeed:
                 raise ValueError(
                     f"line {lineno}: non-positive or non-finite price "
                     f"{price!r} for {config_id!r}")
-            batches.setdefault(tick, []).append(PriceDelta(config_id, price))
+            batch = batches.setdefault(tick, [])
+            if any(d.config_id == config_id for d in batch):
+                # two quotes for one config in one tick are ambiguous —
+                # which is "the" price of the epoch depends on
+                # application order, which replay must not guess
+                raise ValueError(
+                    f"line {lineno}: duplicate quote for {config_id!r} "
+                    f"at tick {tick}")
+            batch.append(PriceDelta(config_id, price))
         return cls(batches, ticks=ticks)
 
     @classmethod
@@ -251,12 +273,26 @@ class ReplayMismatch:
 
 @dataclasses.dataclass(frozen=True)
 class ReplayAudit:
-    """Outcome of one :meth:`JournalReplayer.audit` pass."""
+    """Outcome of one :meth:`JournalReplayer.audit` pass.
+
+    ``mismatches`` are contract violations (the audit failed);
+    ``drift`` surfaces within-contract float32 divergence when auditing
+    in tolerance mode — journaled scores that differ from the cold
+    float64 value by accumulated delta-update ulps (field
+    ``"score-drift"``, typically handoff-row renormalization), and
+    near-tie winner swaps the contract accepts (field ``"winner-tie"``).
+    Drift never fails the audit; it is the visibility the float32
+    contract owes its consumers (DESIGN.md §9).
+    """
 
     decisions: int
     ticks: int
     rejected: int
     mismatches: Tuple[ReplayMismatch, ...]
+    #: within-contract divergences (tolerance mode only; empty for numpy)
+    drift: Tuple[ReplayMismatch, ...] = ()
+    #: the contract the audit ran under (None = pre-contract caller)
+    contract: Optional[ScoreContract] = None
 
     @property
     def ok(self) -> bool:
@@ -289,6 +325,10 @@ class JournalReplayer:
         self.header = header
         self.records = list(records)
         self.catalog_ids: List[Hashable] = list(header["catalog"])
+        #: ranking backend the daemon served with (stamped in the header
+        #: since the jax path landed; older v2 journals read as numpy —
+        #: they could only have been written by the numpy path).
+        self.backend: str = header.get("backend", "numpy")
 
     @classmethod
     def load(cls, store: ProfilingStore, path: str) -> "JournalReplayer":
@@ -341,29 +381,46 @@ class JournalReplayer:
                          dtype=np.float64)
         return rank_dense(hours, mask, vec, self.catalog_ids, job_ids=jobs)
 
-    def audit(self) -> ReplayAudit:
-        """Verify every journaled selection bit-identical to a cold
-        :func:`rank_dense` at its reconstructed epoch.
+    def audit(self, contract: Optional[ScoreContract] = None
+              ) -> ReplayAudit:
+        """Verify every journaled selection against a cold
+        :func:`rank_dense` (numpy/float64) at its reconstructed epoch,
+        under the journal's :class:`~repro.selector.ScoreContract`.
 
-        Compared exactly (no tolerance): the winning config id, its
-        score, the stamped $/h against the reconstructed quote, and the
-        stamped price epoch against the tick count.  JSON floats
-        round-trip through ``repr``, so exact equality is the right bar —
-        one ulp of drift anywhere in the reprice path surfaces here.
+        ``contract`` defaults to the backend stamped in the journal
+        header (``score_contract(self.backend)``):
 
-        Rejections are audited too: a journaled rejection whose
-        (class, exclusions) re-ranks cold to a *valid* winner means the
-        daemon silently served nothing for a rankable job — that is a
-        mismatch, not bookkeeping.
+        * **numpy** — bit-identical: the winning config id, its score,
+          the stamped $/h against the reconstructed quote, and the
+          stamped price epoch are compared with exact equality.  JSON
+          floats round-trip through ``repr``, so one ulp of drift
+          anywhere in the reprice path surfaces here.
+        * **jax** — tolerance mode: the journaled winner must be the
+          cold winner or tied with it within the contract, and the
+          journaled score must be within rel/abs tolerance of that
+          config's cold score.  Within-contract divergence — float32
+          delta-accumulation drift (handoff-row renormalization above
+          all) and accepted near-tie winner swaps — is surfaced in
+          :attr:`ReplayAudit.drift`, never silently absorbed.  The $/h
+          and price-epoch comparisons stay exact: quotes flow through
+          the float64 :class:`~repro.selector.PriceTable` on every
+          backend.
+
+        Rejections are audited identically in both modes: a journaled
+        rejection whose (class, exclusions) re-ranks cold to a *valid*
+        winner means the daemon silently served nothing for a rankable
+        job — that is a mismatch, not bookkeeping.
 
         Decisions between the same two ticks with the same
         (class, exclusions) share identical rank inputs, so the cold
         ranking is memoized per ``(epoch, class, exclusions)`` — the
-        audit costs O(epochs x distinct selections), not O(decisions),
-        while every comparison stays bit-exact.
+        audit costs O(epochs x distinct selections), not O(decisions).
         """
+        if contract is None:
+            contract = score_contract(self.backend)
         n_dec = n_tick = n_rej = 0
         mismatches: List[ReplayMismatch] = []
+        drift: List[ReplayMismatch] = []
         rank_memo: Dict[Tuple, Any] = {}
 
         def differ(seq, job, field, journaled, replayed):
@@ -371,7 +428,7 @@ class JournalReplayer:
                                              replayed))
 
         def ranked_at(rec, epoch, prices):
-            """Memoized cold winner (None when nothing is rankable)."""
+            """Memoized cold ranking (None when nothing is rankable)."""
             klass = JobClass(rec["job_class"]) if rec.get("job_class") \
                 else None
             excl = tuple(rec.get("exclude_groups", ()))
@@ -379,13 +436,14 @@ class JournalReplayer:
             if key in rank_memo:
                 return rank_memo[key]
             try:
-                winner = self._rank_cold(klass, excl, prices)[0]
+                ranking = self._rank_cold(klass, excl, prices)
             except NothingRankableError:
-                winner = None
-            if winner is not None and winner.score == float("inf"):
-                winner = None
-            rank_memo[key] = winner
-            return winner
+                ranking = None
+            if ranking is not None and \
+                    ranking[0].score == float("inf"):
+                ranking = None
+            rank_memo[key] = ranking
+            return ranking
 
         for rec, epoch, prices in self.walk():
             kind = rec.get("kind")
@@ -401,28 +459,47 @@ class JournalReplayer:
                 if rec["price_epoch"] != epoch:
                     differ(seq, job, "price_epoch", rec["price_epoch"],
                            epoch)
-                winner = ranked_at(rec, epoch, prices)
-                if winner is not None:
-                    differ(seq, job, "rejected", None, winner.config_id)
+                ranking = ranked_at(rec, epoch, prices)
+                if ranking is not None:
+                    differ(seq, job, "rejected", None,
+                           ranking[0].config_id)
                 continue
             if kind != "decision":
                 continue
             n_dec += 1
             if rec["price_epoch"] != epoch:
                 differ(seq, job, "price_epoch", rec["price_epoch"], epoch)
-            winner = ranked_at(rec, epoch, prices)
-            if winner is None:
+            ranking = ranked_at(rec, epoch, prices)
+            if ranking is None:
                 differ(seq, job, "rankable", rec["config"], None)
                 continue
-            if rec["config"] != winner.config_id:
-                differ(seq, job, "config", rec["config"], winner.config_id)
-            if rec["score"] != winner.score:
-                differ(seq, job, "score", rec["score"], winner.score)
+            winner = ranking[0]
+            if not contract.winner_matches(rec["config"], ranking):
+                differ(seq, job, "config", rec["config"],
+                       winner.config_id)
+            else:
+                # the cold score the journaled score answers to: the
+                # journaled config's own (identical to the winner's
+                # except on an accepted near-tie swap)
+                cold = winner if rec["config"] == winner.config_id else \
+                    next(r for r in ranking
+                         if r.config_id == rec["config"])
+                if cold is not winner:
+                    drift.append(ReplayMismatch(
+                        seq, job, "winner-tie", rec["config"],
+                        winner.config_id))
+                if not contract.scores_match(rec["score"], cold.score):
+                    differ(seq, job, "score", rec["score"], cold.score)
+                elif rec["score"] != cold.score:
+                    drift.append(ReplayMismatch(
+                        seq, job, "score-drift", rec["score"],
+                        cold.score))
             quote = prices.get(rec["config"])
             if rec["hourly_cost"] != quote:
                 differ(seq, job, "hourly_cost", rec["hourly_cost"], quote)
         return ReplayAudit(decisions=n_dec, ticks=n_tick, rejected=n_rej,
-                           mismatches=tuple(mismatches))
+                           mismatches=tuple(mismatches),
+                           drift=tuple(drift), contract=contract)
 
     # -- dynamic-price evaluation -------------------------------------------
     def evaluate(self, base_prices: Optional[Mapping[Hashable, float]]
@@ -437,4 +514,5 @@ class JournalReplayer:
         if base_prices is None:
             base_prices = {c: float(p) for c, p in self.header["prices"]}
         return dynamic_evaluation(self.store, self.decisions(),
-                                  self.catalog_ids, base_prices)
+                                  self.catalog_ids, base_prices,
+                                  backend=self.backend)

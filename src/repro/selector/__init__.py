@@ -30,14 +30,20 @@ See DESIGN.md for the full architecture.
 from repro.selector.catalog import (BaseCatalog, GcpVmCatalog,
                                     IdentityCatalog, PriceTable,
                                     ResourceCatalog, TpuSliceCatalog)
-from repro.selector.rank import (NothingRankableError, RankedConfig,
-                                 RankState, rank_dense, rank_pairs)
+from repro.selector.rank import (BACKEND_ENV_VAR, BACKENDS,
+                                 BackendUnavailableError, JaxRankState,
+                                 NothingRankableError, RankedConfig,
+                                 RankState, SCORE_CONTRACTS, ScoreContract,
+                                 backend_available, default_backend,
+                                 rank_dense, rank_pairs, score_contract)
 from repro.selector.store import ProfilingStore
 from repro.selector.service import Decision, SelectionService
 
 __all__ = [
-    "BaseCatalog", "Decision", "GcpVmCatalog", "IdentityCatalog",
+    "BACKEND_ENV_VAR", "BACKENDS", "BackendUnavailableError", "BaseCatalog",
+    "Decision", "GcpVmCatalog", "IdentityCatalog", "JaxRankState",
     "NothingRankableError", "PriceTable", "ProfilingStore", "RankState",
-    "RankedConfig", "ResourceCatalog", "SelectionService", "TpuSliceCatalog",
-    "rank_dense", "rank_pairs",
+    "RankedConfig", "ResourceCatalog", "SCORE_CONTRACTS", "ScoreContract",
+    "SelectionService", "TpuSliceCatalog", "backend_available",
+    "default_backend", "rank_dense", "rank_pairs", "score_contract",
 ]

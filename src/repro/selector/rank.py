@@ -18,12 +18,20 @@ Two backends:
     fuses the whole ranking into one XLA computation — the serving-scale
     path for 10k+ (job x config) cells, benchmarked in
     ``benchmarks/rank_bench.py``.
+
+Each backend carries an explicit :class:`ScoreContract` (DESIGN.md §9):
+numpy guarantees bit-identity between the incremental and cold paths;
+jax is float32 and guarantees the same winner (or a winner tied within
+tolerance) with scores inside a rel/abs envelope.  Incremental repricing
+lives in :class:`RankState` (numpy) and :class:`JaxRankState` (the
+accelerator-resident jitted delta-update kernel with donated buffers).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import (Callable, Hashable, List, Mapping, Optional, Sequence,
-                    Tuple, Union)
+import os
+from typing import (Any, Callable, Hashable, List, Mapping, Optional,
+                    Sequence, Tuple, Union)
 
 import numpy as np
 
@@ -33,6 +41,111 @@ try:  # accelerator path; the selector core works without jax installed
     _HAVE_JAX = True
 except ImportError:  # pragma: no cover
     _HAVE_JAX = False
+
+#: the knob CI's backend matrix turns; resolved by :func:`default_backend`.
+BACKEND_ENV_VAR = "FLORA_RANK_BACKEND"
+BACKENDS = ("numpy", "jax")
+
+
+class BackendUnavailableError(RuntimeError):
+    """A ranking backend was requested whose runtime dependency is not
+    installed (today: ``backend="jax"`` without jax).  Typed so callers —
+    and test harnesses — can skip rather than die: distinguishable from
+    both misconfiguration ``ValueError``\\ s (unknown backend names) and
+    genuine crashes."""
+
+
+def default_backend() -> str:
+    """The backend used when a :class:`~repro.selector.SelectionService`
+    is built without an explicit ``backend=``: the ``FLORA_RANK_BACKEND``
+    env var, else ``"numpy"``.  ``rank_dense`` itself always defaults to
+    numpy — the float64 bit-stable reference that replay audits re-rank
+    against must not move under the env var."""
+    backend = os.environ.get(BACKEND_ENV_VAR, "numpy")
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r} in ${BACKEND_ENV_VAR} "
+            f"(expected one of {BACKENDS})")
+    return backend
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoreContract:
+    """What a backend promises about incremental-vs-cold score equality.
+
+    * numpy/float64: **bit-identical** — the incremental
+      :class:`RankState` recomputes updated cells with the cold path's
+      exact elementwise arithmetic and re-reduces scores with the same
+      full ``norm.sum(axis=0)``, so any reprice sequence equals a cold
+      ``rank_dense`` down to the last ulp (``rel_tol == abs_tol == 0``).
+    * jax/float32: **same-winner-or-tied within tolerance** — float32
+      has no bit-identity story for delta updates (DESIGN.md §9): the
+      jitted kernel folds per-tick deltas into standing score
+      accumulators, so scores drift by ulps per tick, and two configs
+      whose true scores are closer than the drift may swap.  The
+      contract is that every score lies within ``rel_tol``/``abs_tol``
+      of the cold value and the reported winner is either identical to
+      the cold winner or tied with it within the same envelope.
+    """
+
+    backend: str
+    bit_identical: bool
+    rel_tol: float = 0.0
+    abs_tol: float = 0.0
+
+    def scores_match(self, a: float, b: float) -> bool:
+        """Are two scores equal under this contract?  (``inf == inf``
+        counts: unprofiled configs score ``+inf`` on every backend.)"""
+        if a == b:
+            return True
+        if self.bit_identical:
+            return False
+        return abs(a - b) <= self.abs_tol + self.rel_tol * max(abs(a),
+                                                               abs(b))
+
+    def winner_matches(self, config_id: Hashable,
+                       ranking: Sequence["RankedConfig"]) -> bool:
+        """Is ``config_id`` an acceptable winner against a cold
+        ``ranking``?  Identical to the cold winner always qualifies; a
+        tolerance backend also accepts a config whose *cold* score ties
+        the cold winner's within the contract (float32 drift can swap
+        near-ties, never separated configs)."""
+        if not ranking:
+            return False
+        if config_id == ranking[0].config_id:
+            return True
+        if self.bit_identical:
+            return False
+        for r in ranking:
+            if r.config_id == config_id:
+                return self.scores_match(r.score, ranking[0].score)
+        return False
+
+
+#: Per-backend contracts.  The jax tolerances cover float32 rounding of
+#: the inputs (~1e-7 relative) plus delta-accumulation drift across
+#: ticks, with two orders of magnitude of headroom (DESIGN.md §9).
+SCORE_CONTRACTS: Mapping[str, ScoreContract] = {
+    "numpy": ScoreContract("numpy", bit_identical=True),
+    "jax": ScoreContract("jax", bit_identical=False,
+                         rel_tol=1e-4, abs_tol=1e-6),
+}
+
+
+def backend_available(backend: str) -> bool:
+    """Can ``backend`` actually run here?  ``"numpy"`` always; ``"jax"``
+    only when jax imports.  Unknown names are *not* an error from this
+    predicate (they fail later with ``ValueError`` at dispatch)."""
+    return backend != "jax" or _HAVE_JAX
+
+
+def score_contract(backend: str) -> ScoreContract:
+    """The :class:`ScoreContract` for ``backend`` (raises on unknown)."""
+    try:
+        return SCORE_CONTRACTS[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r} "
+                         f"(expected one of {BACKENDS})")
 
 
 class NothingRankableError(ValueError):
@@ -49,6 +162,41 @@ class RankedConfig:
     config_id: Hashable
     score: float           # sum of normalized costs; lower is better
     mean_norm_cost: float  # score / number of contributing test jobs
+
+
+def _canonicalize_universe(
+        hours: np.ndarray, mask: np.ndarray, prices: np.ndarray,
+        job_ids: Optional[Sequence[Hashable]]
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Shared input validation for every dense entry point
+    (:func:`rank_dense`, :class:`RankState`, :class:`JaxRankState`):
+    canonicalize dtypes, check shapes, reject empty job axes and
+    non-positive profiled costs (both indicate a broken trace, not a
+    rankable universe)."""
+    hours = np.asarray(hours, dtype=np.float64)
+    mask = np.asarray(mask, dtype=bool)
+    prices = np.asarray(prices, dtype=np.float64)
+    if hours.shape != mask.shape or hours.shape[1] != prices.shape[0]:
+        raise ValueError(f"shape mismatch: hours {hours.shape}, "
+                         f"mask {mask.shape}, prices {prices.shape}")
+    if hours.shape[0] == 0:
+        raise NothingRankableError("no test jobs to learn from")
+    bad = mask & ~((hours * prices[None, :]) > 0)
+    if bad.any():
+        row = int(np.argwhere(bad)[0][0])
+        job = job_ids[row] if job_ids is not None else row
+        raise ValueError(f"non-positive cost for job {job!r}")
+    return hours, mask, prices
+
+
+def _position_index(config_ids: Sequence[Hashable]
+                    ) -> "dict[Hashable, int]":
+    """Config id -> column position; rejects duplicates (the states key
+    reprice deltas on it, so a duplicate would silently alias columns)."""
+    pos = {c: i for i, c in enumerate(config_ids)}
+    if len(pos) != len(config_ids):
+        raise ValueError("duplicate config ids")
+    return pos
 
 
 def _scores_numpy(hours: np.ndarray, mask: np.ndarray, prices: np.ndarray
@@ -94,22 +242,13 @@ def rank_dense(hours: np.ndarray, mask: np.ndarray, prices: np.ndarray,
     Raises on an empty job axis and on non-positive profiled costs (both
     indicate a broken trace, not a rankable universe).
     """
-    hours = np.asarray(hours, dtype=np.float64)
-    mask = np.asarray(mask, dtype=bool)
-    prices = np.asarray(prices, dtype=np.float64)
-    if hours.shape != mask.shape or hours.shape[1] != prices.shape[0]:
-        raise ValueError(f"shape mismatch: hours {hours.shape}, "
-                         f"mask {mask.shape}, prices {prices.shape}")
-    if hours.shape[0] == 0:
-        raise NothingRankableError("no test jobs to learn from")
-    bad = mask & ~((hours * prices[None, :]) > 0)
-    if bad.any():
-        row = int(np.argwhere(bad)[0][0])
-        job = job_ids[row] if job_ids is not None else row
-        raise ValueError(f"non-positive cost for job {job!r}")
+    hours, mask, prices = _canonicalize_universe(hours, mask, prices,
+                                                 job_ids)
     if backend == "jax":
         if not _HAVE_JAX:
-            raise RuntimeError("jax backend requested but jax is missing")
+            raise BackendUnavailableError(
+                "backend='jax' requested but jax is not installed "
+                "(the numpy backend needs no extras)")
         scores, counts = (np.asarray(x) for x in _scores_jax(
             jnp.asarray(hours), jnp.asarray(mask), jnp.asarray(prices)))
     elif backend == "numpy":
@@ -170,29 +309,22 @@ class RankState:
     the price of exactness, and it is still ~100x cheaper than the cold
     path at 10k configs; see ``benchmarks/market_bench.py``).
 
-    numpy/float64 only — the jax backend's float32 kernel has no exact
-    incremental counterpart.
+    numpy/float64 only — float32 has no exact incremental story, so the
+    jax backend's accelerator-resident counterpart,
+    :class:`JaxRankState`, serves a *tolerance* contract instead
+    (same winner or tied within tolerance; see :class:`ScoreContract`
+    and DESIGN.md §9).
     """
 
     def __init__(self, hours: np.ndarray, mask: np.ndarray,
                  prices: np.ndarray, config_ids: Sequence[Hashable],
                  job_ids: Optional[Sequence[Hashable]] = None):
-        self.hours = np.asarray(hours, dtype=np.float64)
-        self.mask = np.asarray(mask, dtype=bool)
-        self.prices = np.array(prices, dtype=np.float64)
         self.config_ids = list(config_ids)
         self.job_ids = list(job_ids) if job_ids is not None else None
-        if self.hours.shape != self.mask.shape or \
-                self.hours.shape[1] != self.prices.shape[0]:
-            raise ValueError(f"shape mismatch: hours {self.hours.shape}, "
-                             f"mask {self.mask.shape}, "
-                             f"prices {self.prices.shape}")
-        if self.hours.shape[0] == 0:
-            raise NothingRankableError("no test jobs to learn from")
-        self._pos = {c: i for i, c in enumerate(self.config_ids)}
-        if len(self._pos) != len(self.config_ids):
-            raise ValueError("duplicate config ids")
-        self._check_positive(self.mask, self.hours * self.prices[None, :])
+        self.hours, self.mask, self.prices = _canonicalize_universe(
+            hours, mask, prices, self.job_ids)
+        self.prices = self.prices.copy()        # mutated by reprice
+        self._pos = _position_index(self.config_ids)
         #: ticks applied since construction (diagnostics, cache keys).
         self.reprices = 0
         self._rebuild()
@@ -279,3 +411,196 @@ class RankState:
         m = float(self.scores[i] / self.counts[i]) if self.counts[i] \
             else float("inf")
         return RankedConfig(c, s, m)
+
+
+# --- the accelerator-resident incremental path (jax backend) ----------------------
+
+if _HAVE_JAX:
+    _JAX_STATE_FNS: Optional[Tuple[Any, Any, Any]] = None
+
+    def _jax_state_fns() -> Tuple[Any, Any, Any]:
+        """``(cold, step, winner)`` jitted kernels, built once on first
+        use (so importing the selector never initializes an accelerator
+        backend).  The step donates its five state buffers — a tick
+        updates the resident arrays in place instead of allocating a
+        fresh universe — except on CPU, whose client cannot donate and
+        would warn on every call site."""
+        global _JAX_STATE_FNS
+        if _JAX_STATE_FNS is not None:
+            return _JAX_STATE_FNS
+
+        def cold(hours, mask, prices):
+            # the cold-path arithmetic (float32): the state a delta
+            # stream starts from
+            cost = jnp.where(mask, hours * prices[None, :], jnp.inf)
+            row_best = jnp.min(cost, axis=1)
+            norm = jnp.where(mask, cost / row_best[:, None], 0.0)
+            return cost, row_best, norm, norm.sum(axis=0)
+
+        def step(prices, cost, row_best, norm, scores, hours, mask,
+                 cols, new_prices):
+            # -- changed columns: gather, recompute cells, scatter back
+            sub_mask = mask[:, cols]
+            new_cost = jnp.where(sub_mask,
+                                 hours[:, cols] * new_prices[None, :],
+                                 jnp.inf)
+            old_cost = cost[:, cols]
+            prices = prices.at[cols].set(new_prices)
+            cost = cost.at[:, cols].set(new_cost)
+            # -- min-handoff rows: the masked row-minimum was in a
+            #    changed column, or a changed column undercuts it
+            was_min = old_cost.min(axis=1) == row_best
+            undercut = new_cost.min(axis=1) < row_best
+            fresh = jnp.where(was_min | undercut, cost.min(axis=1),
+                              row_best)
+            moved = fresh != row_best
+            row_best = fresh
+            # handed-off rows renormalize whole rows; the delta folds
+            # into the standing score accumulators — the per-tick ulp
+            # drift the jax ScoreContract tolerances cover (DESIGN.md §9)
+            fresh_rows = jnp.where(mask, cost / row_best[:, None], 0.0)
+            scores = scores + jnp.where(moved[:, None],
+                                        fresh_rows - norm, 0.0).sum(axis=0)
+            norm = jnp.where(moved[:, None], fresh_rows, norm)
+            # changed columns re-sum from scratch with a .set — the
+            # duplicate indices bucket padding introduces are idempotent
+            # under .set (a .add of deltas would double-count them)
+            col_norm = jnp.where(sub_mask,
+                                 cost[:, cols] / row_best[:, None], 0.0)
+            norm = norm.at[:, cols].set(col_norm)
+            scores = scores.at[cols].set(col_norm.sum(axis=0))
+            return prices, cost, row_best, norm, scores, moved.sum()
+
+        def winner(scores, finite):
+            masked = jnp.where(finite, scores, jnp.inf)
+            i = jnp.argmin(masked)
+            return i, scores[i]
+
+        donate = () if jax.default_backend() == "cpu" else (0, 1, 2, 3, 4)
+        _JAX_STATE_FNS = (jax.jit(cold),
+                          jax.jit(step, donate_argnums=donate),
+                          jax.jit(winner))
+        return _JAX_STATE_FNS
+
+
+class JaxRankState:
+    """Accelerator-resident incremental repricing (the jax backend).
+
+    The float32 counterpart of :class:`RankState` for serving-scale
+    universes: the runtime matrix, mask and every intermediate (cost,
+    row-min, normalized-cost, score accumulators) live as device arrays,
+    and :meth:`reprice` runs one jitted delta-update kernel whose state
+    buffers are donated — a tick updates the universe in place, touching
+    only the changed cost/norm columns plus the rows whose masked
+    row-minimum handed off, with per-column score re-sums for changed
+    columns and delta-folds for handed-off rows.  Host traffic per tick
+    is the delta batch in and one scalar (the handoff count) out; a cold
+    ``rank_dense(backend="jax")`` instead re-uploads the whole float64
+    universe and re-materializes every ranking
+    (``benchmarks/market_bench.py`` quantifies the gap).
+
+    **Tolerance contract** (:data:`SCORE_CONTRACTS` ``["jax"]``): float32
+    sums are not decomposable, and the delta-folded score accumulators
+    drift by ulps per tick, so — unlike :class:`RankState` — rankings
+    are *not* bit-identical to a cold re-rank.  The contract is
+    same-winner-or-tied-within-tolerance, scores inside the rel/abs
+    envelope; ``JournalReplayer.audit`` verifies journals produced
+    through this path in exactly those terms (DESIGN.md §9).
+
+    Delta batches are padded to power-of-4 column-count buckets so the
+    jitted step compiles O(log C) shape variants, not one per batch
+    size; padding repeats the first (column, price) pair, which every
+    kernel op treats idempotently.
+    """
+
+    backend = "jax"
+    contract = SCORE_CONTRACTS["jax"]
+    _BUCKET_BASE = 8
+
+    def __init__(self, hours: np.ndarray, mask: np.ndarray,
+                 prices: np.ndarray, config_ids: Sequence[Hashable],
+                 job_ids: Optional[Sequence[Hashable]] = None):
+        if not _HAVE_JAX:
+            raise BackendUnavailableError(
+                "JaxRankState requires jax; use RankState (numpy) "
+                "when it is not installed")
+        self.config_ids = list(config_ids)
+        self.job_ids = list(job_ids) if job_ids is not None else None
+        hours, mask, prices = _canonicalize_universe(hours, mask, prices,
+                                                     self.job_ids)
+        self._pos = _position_index(self.config_ids)
+        cold, self._step, self._winner_fn = _jax_state_fns()
+        # read-only residents (uploaded once, never donated)
+        self.d_hours = jnp.asarray(hours, dtype=jnp.float32)
+        self.d_mask = jnp.asarray(mask)
+        self.counts = mask.sum(axis=0)
+        self._d_finite = jnp.asarray(self.counts > 0)
+        # the donated state buffers
+        self.d_prices = jnp.asarray(prices, dtype=jnp.float32)
+        (self.d_cost, self.d_row_best, self.d_norm,
+         self.d_scores) = cold(self.d_hours, self.d_mask, self.d_prices)
+        #: ticks applied since construction (diagnostics, cache keys).
+        self.reprices = 0
+
+    @property
+    def prices(self) -> np.ndarray:
+        """Current per-config $/h as seen by the kernel (float32 quotes
+        lifted to a host float64 vector)."""
+        return np.asarray(self.d_prices, dtype=np.float64)
+
+    @property
+    def scores(self) -> np.ndarray:
+        """Current score accumulators on the host (float64 lift)."""
+        return np.asarray(self.d_scores, dtype=np.float64)
+
+    def reprice(self, deltas: Union[Mapping[Hashable, float],
+                                    Sequence[Tuple[Hashable, float]]]
+                ) -> int:
+        """Apply ``{config_id: new $/h}`` deltas on device; returns
+        #rows whose masked row-minimum handed off (synced to host, so a
+        return means the tick's kernel has completed)."""
+        table = deltas if isinstance(deltas, Mapping) else dict(deltas)
+        if not table:
+            return 0
+        try:
+            cols = np.asarray([self._pos[c] for c in table],
+                              dtype=np.int32)
+        except KeyError as e:
+            raise ValueError(f"unknown config id in deltas: {e.args[0]!r}")
+        new_prices = np.asarray(list(table.values()), dtype=np.float64)
+        bad = ~(np.isfinite(new_prices) & (new_prices > 0))
+        if bad.any():
+            offender = list(table)[int(np.flatnonzero(bad)[0])]
+            raise ValueError(f"non-positive or non-finite price for "
+                             f"config {offender!r}")
+        k = cols.shape[0]
+        bucket = self._BUCKET_BASE
+        while bucket < k:
+            bucket *= 4
+        if bucket > k:        # pad with an idempotent repeat (see class doc)
+            cols = np.concatenate(
+                [cols, np.full(bucket - k, cols[0], dtype=np.int32)])
+            new_prices = np.concatenate(
+                [new_prices, np.full(bucket - k, new_prices[0])])
+        (self.d_prices, self.d_cost, self.d_row_best, self.d_norm,
+         self.d_scores, moved) = self._step(
+            self.d_prices, self.d_cost, self.d_row_best, self.d_norm,
+            self.d_scores, self.d_hours, self.d_mask,
+            jnp.asarray(cols), jnp.asarray(new_prices, dtype=jnp.float32))
+        self.reprices += 1
+        return int(moved)
+
+    def ranking(self) -> List[RankedConfig]:
+        """The full sorted ranking under the tolerance contract: one
+        device→host score transfer, then the same materialization as
+        every other path (ties broken by catalog order)."""
+        return _materialize(self.scores, self.counts, self.config_ids)
+
+    def winner(self) -> RankedConfig:
+        """argmin on device — only two scalars cross to the host."""
+        i, s = self._winner_fn(self.d_scores, self._d_finite)
+        i = int(i)
+        c = self.config_ids[i]
+        if not self.counts[i]:
+            return RankedConfig(c, float("inf"), float("inf"))
+        return RankedConfig(c, float(s), float(s) / int(self.counts[i]))

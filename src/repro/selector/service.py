@@ -27,8 +27,10 @@ from typing import (Any, Callable, Dict, Hashable, Mapping, Optional,
 
 from repro.core.trace import JobClass
 from repro.selector.catalog import BaseCatalog, PriceTable
-from repro.selector.rank import (NothingRankableError, RankedConfig,
-                                 RankState, rank_dense)
+from repro.selector.rank import (BACKENDS, BackendUnavailableError,
+                                 JaxRankState, NothingRankableError,
+                                 RankedConfig, RankState, backend_available,
+                                 default_backend)
 from repro.selector.store import ProfilingStore
 
 
@@ -57,11 +59,26 @@ class SelectionService:
                  price_source: Optional[Any] = None,
                  classifier: Optional[Callable[[Hashable],
                                                JobClass]] = None,
-                 backend: str = "numpy"):
+                 backend: Optional[str] = None):
         self.catalog = catalog
         self.store = store
         self.classifier = classifier
-        self.backend = backend
+        #: ``None`` resolves via :func:`repro.selector.default_backend`
+        #: (the ``FLORA_RANK_BACKEND`` env var — CI's backend matrix),
+        #: else "numpy".  "numpy" serves the bit-identical float64
+        #: contract; "jax" the accelerator-resident float32 tolerance
+        #: contract (DESIGN.md §9).
+        self.backend = backend if backend is not None else default_backend()
+        # fail at construction, not first submit: a service that can
+        # never rank is misconfiguration the caller should see now
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             f"(expected one of {BACKENDS})")
+        if not backend_available(self.backend):
+            # typed, so harnesses can skip instead of dying
+            raise BackendUnavailableError(
+                f"backend={self.backend!r} requested but its runtime "
+                f"dependency is not installed")
         self._price_source = price_source
         self._price_epoch = 0
         self._cache: Dict[Tuple, Tuple[RankedConfig, ...]] = {}
@@ -211,20 +228,25 @@ class SelectionService:
         config_ids = self.catalog.ids()
         hours, mask = self.store.matrix(job_ids=jobs, config_ids=config_ids)
         prices = self.catalog.price_vector(self._price_source)
+        # build through a live state so later reprices are incremental:
+        # RankState's arithmetic is the cold numpy path verbatim
+        # (bit-identical); JaxRankState serves the accelerator-resident
+        # float32 tolerance contract (DESIGN.md §9).
         if self.backend == "numpy":
-            # build through RankState so later reprices are incremental;
-            # its arithmetic is the cold path verbatim (bit-identical).
-            for stale in [k for k in self._states
-                          if k[0] != self.store.version]:
-                del self._states[stale]
-                self._state_tags.pop(stale, None)
-            state = RankState(hours, mask, prices, config_ids, job_ids=jobs)
-            self._states[base_key] = state
-            self._state_tags[base_key] = tag
-            ranking = tuple(state.ranking())
+            state_cls = RankState
+        elif self.backend == "jax":
+            state_cls = JaxRankState
         else:
-            ranking = tuple(rank_dense(hours, mask, prices, config_ids,
-                                       job_ids=jobs, backend=self.backend))
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             f"(expected one of {BACKENDS})")
+        for stale in [k for k in self._states
+                      if k[0] != self.store.version]:
+            del self._states[stale]
+            self._state_tags.pop(stale, None)
+        state = state_cls(hours, mask, prices, config_ids, job_ids=jobs)
+        self._states[base_key] = state
+        self._state_tags[base_key] = tag
+        ranking = tuple(state.ranking())
         self._cache[key] = ranking
         return ranking, False
 

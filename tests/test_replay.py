@@ -32,6 +32,8 @@ from repro.selector import (IdentityCatalog, PriceTable, ProfilingStore,
 FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "fixtures")
 GOLDEN_JOURNAL = os.path.join(FIXTURES, "decision_journal_v2.golden.jsonl")
+GOLDEN_JOURNAL_JAX = os.path.join(FIXTURES,
+                                  "decision_journal_v2_jax.golden.jsonl")
 PRICE_FIXTURE = os.path.join(os.path.dirname(FIXTURES), "..", "examples",
                              "data", "gcp_spot_prices.csv")
 
@@ -48,17 +50,19 @@ SPEED = {"dp256xtp1": {"train_4k": 1.0, "decode_32k": 4.0},
          "v5p-dp16xtp16": {"train_4k": 0.8, "decode_32k": 0.55}}
 
 
-def live_service() -> SelectionService:
+def live_service(backend=None) -> SelectionService:
     recs = [WorkloadRecord(arch=a, shape=s, mesh=m, step_seconds=v)
             for a in ("a1", "a2")
             for m, shapes in SPEED.items() for s, v in shapes.items()]
-    svc = make_service(MESH_OPTIONS, recs, TpuPriceModel("ondemand"))
+    svc = make_service(MESH_OPTIONS, recs, TpuPriceModel("ondemand"),
+                       backend=backend)
     svc.set_price_source(PriceTable.from_catalog(svc.catalog,
                                                  TpuPriceModel("ondemand")))
     return svc
 
 
-def synth_service(n_jobs=6, n_cfgs=12, seed=0) -> SelectionService:
+def synth_service(n_jobs=6, n_cfgs=12, seed=0,
+                  backend=None) -> SelectionService:
     """Identity-catalog universe with correlated per-class runtimes."""
     rng = np.random.default_rng(seed)
     ids = [f"c{i}" for i in range(n_cfgs)]
@@ -74,7 +78,8 @@ def synth_service(n_jobs=6, n_cfgs=12, seed=0) -> SelectionService:
                             * rng.lognormal(0.0, 0.05)),
                       job_class=klass, group=None)
     table = PriceTable({c: float(rng.uniform(1.0, 20.0)) for c in ids})
-    return SelectionService(IdentityCatalog(ids), store, table)
+    return SelectionService(IdentityCatalog(ids), store, table,
+                            backend=backend)
 
 
 # --- recorded feed: round-trip ----------------------------------------------------
@@ -202,14 +207,57 @@ def test_malformed_feed_rows_raise_with_line_numbers(bad, match):
 def test_out_of_order_ticks_raise():
     head = good_csv().splitlines()[:2]
     text = "\n".join(head + ["5,7,1.0", "2,7,2.0"]) + "\n"
-    with pytest.raises(ValueError, match="out of order"):
+    with pytest.raises(ValueError, match="out of order") as e:
         RecordedPriceFeed.loads(text)
+    assert "line 4" in str(e.value)
 
 
-# --- journal schema v2: golden file -----------------------------------------------
+def test_empty_feed_file_raises_with_line_number():
+    """Satellite (ISSUE 4): an empty file is a malformed recording, not
+    an empty market — it must raise, naming line 1."""
+    with pytest.raises(ValueError, match="line 1.*empty"):
+        RecordedPriceFeed.loads("")
 
-def golden_daemon() -> SelectionDaemon:
-    svc = live_service()
+
+@pytest.mark.parametrize("truncated", [
+    '0,"c0",',          # cut mid-price (trailing comma survives)
+    '0,"c0',            # cut mid-id (unterminated quote)
+    '0,',               # cut after the tick
+])
+def test_truncated_final_row_raises_with_line_number(truncated):
+    """Satellite (ISSUE 4): a recording cut off mid-row (partial write,
+    truncated download) must raise at its line, never load the prefix
+    silently."""
+    with pytest.raises(ValueError) as e:
+        RecordedPriceFeed.loads(row(truncated))
+    assert "line 3" in str(e.value)
+
+
+def test_duplicate_tick_quote_raises_with_line_number():
+    """Satellite (ISSUE 4): two quotes for one config at one tick are
+    ambiguous (which is 'the' epoch price depends on application order)
+    — the load must refuse, naming the duplicate's line."""
+    head = good_csv().splitlines()[:2]
+    text = "\n".join(head + ['2,7,1.0', '2,8,2.0', '2,7,3.0']) + "\n"
+    with pytest.raises(ValueError, match="duplicate quote") as e:
+        RecordedPriceFeed.loads(text)
+    assert "line 5" in str(e.value)
+    # the same duplicate is rejected at construction time too
+    from repro.market import PriceDelta
+    with pytest.raises(ValueError, match="duplicate quote"):
+        RecordedPriceFeed({0: [PriceDelta("a", 1.0), PriceDelta("a", 2.0)]})
+    # distinct configs in one tick batch stay legal (that IS a batch)
+    feed = RecordedPriceFeed.loads(
+        "\n".join(head + ['2,7,1.0', '2,8,2.0']) + "\n")
+    assert len(feed.poll(2)) == 2
+
+
+# --- journal schema v2: golden files ----------------------------------------------
+
+def golden_daemon(backend="numpy") -> SelectionDaemon:
+    # the goldens pin one journal layout per backend, so the backend is
+    # explicit here — never FLORA_RANK_BACKEND-resolved
+    svc = live_service(backend=backend)
     feed = SimulatedSpotFeed(dict(svc.price_source.items()), seed=6,
                              change_fraction=0.6)
     return SelectionDaemon(svc, feed)
@@ -235,11 +283,45 @@ def test_journal_schema_golden_file():
         assert daemon.journal_dump() == f.read()
 
 
+def test_journal_golden_file_jax_backend():
+    """Satellite (ISSUE 4): the journal layout of a jax-backed daemon is
+    pinned alongside the numpy golden.  The header stamps
+    ``"backend": "jax"`` so replays know the tolerance audit mode
+    applies.
+
+    The pin mirrors the backend's own contract: every record is
+    compared field-for-field exactly — kinds, seqs, winners, $/h,
+    epochs, deltas, the header — *except* the float32-derived ``score``
+    values, which are held to the jax ``ScoreContract`` instead of
+    their bytes (pyproject pins only ``jax>=0.4``; float32 XLA
+    reductions have no cross-release byte-stability guarantee, unlike
+    the float64 numpy golden).  Regenerate together with the numpy
+    golden (same command, same commit discipline)."""
+    pytest.importorskip("jax")
+    from repro.selector import score_contract
+    daemon = golden_daemon(backend="jax")
+    daemon.run(GOLDEN_STREAM)
+    header, records = SelectionDaemon.loads_journal(daemon.journal_dump())
+    assert header["backend"] == "jax"
+    with open(GOLDEN_JOURNAL_JAX) as f:
+        g_header, g_records = SelectionDaemon.loads_journal(f.read())
+    assert header == g_header
+    assert len(records) == len(g_records)
+    contract = score_contract("jax")
+    for rec, golden in zip(records, g_records):
+        assert {k: v for k, v in rec.items() if k != "score"} == \
+            {k: v for k, v in golden.items() if k != "score"}
+        assert ("score" in rec) == ("score" in golden)
+        if "score" in golden:
+            assert contract.scores_match(rec["score"], golden["score"])
+
+
 def test_journal_v2_is_self_contained():
     daemon = golden_daemon()
     daemon.run(GOLDEN_STREAM)
     header, records = SelectionDaemon.loads_journal(daemon.journal_dump())
     assert header["version"] == JOURNAL_VERSION == 2
+    assert header["backend"] == "numpy"
     assert [c for c, _ in header["prices"]] == header["catalog"]
     assert all(p > 0 for _, p in header["prices"])
     for rec in records:
@@ -301,12 +383,44 @@ def test_audit_detects_tampered_selection():
 
 
 def test_audit_detects_single_ulp_score_drift():
-    daemon = run_daemon()
+    # a float64 ulp is only a mismatch under the numpy bit-identity
+    # contract — pin the backend so FLORA_RANK_BACKEND=jax (CI's matrix)
+    # doesn't soften this audit into tolerance mode
+    daemon = run_daemon(svc=synth_service(backend="numpy"))
     header, records = SelectionDaemon.loads_journal(daemon.journal_dump())
     victim = next(r for r in records if r["kind"] == "decision")
     victim["score"] = np.nextafter(victim["score"], np.inf)
     audit = JournalReplayer(daemon.service.store, (header, records)).audit()
     assert [m.field for m in audit.mismatches] == ["score"]
+
+
+def test_tolerance_audit_surfaces_drift_and_bounds_it():
+    """Satellite (ISSUE 4): a jax-backed journal audits in tolerance
+    mode — float32 score divergence from the cold float64 re-rank is
+    surfaced as ``drift`` (not a failure) while anything beyond the
+    ScoreContract still fails the audit."""
+    pytest.importorskip("jax")
+    from repro.selector import score_contract
+    daemon = run_daemon(svc=synth_service(backend="jax"))
+    replayer = JournalReplayer(daemon.service.store, daemon.journal_dump())
+    assert replayer.backend == "jax"
+    audit = replayer.audit()
+    assert audit.ok, audit.mismatches[:3]
+    assert audit.contract == score_contract("jax")
+    # float32 scores against float64 cold re-ranks: drift is expected
+    # and must be *surfaced*, not silently absorbed
+    assert any(d.field == "score-drift" for d in audit.drift)
+    for d in audit.drift:
+        if d.field == "score-drift":
+            assert audit.contract.scores_match(d.journaled, d.replayed)
+            assert d.journaled != d.replayed
+    # beyond-contract tamper still fails, tolerance notwithstanding
+    header, records = SelectionDaemon.loads_journal(daemon.journal_dump())
+    victim = next(r for r in records if r["kind"] == "decision")
+    victim["score"] *= 1.01           # 1% >> rel_tol
+    bad = JournalReplayer(daemon.service.store, (header, records)).audit()
+    assert not bad.ok
+    assert any(m.field == "score" for m in bad.mismatches)
 
 
 def test_audit_detects_dropped_tick_deltas():
@@ -526,13 +640,46 @@ def test_bundled_fixture_replay_end_to_end():
     assert ev.skipped == 0
 
 
+def test_bundled_fixture_jax_daemon_audits_in_tolerance_mode():
+    """ISSUE 4 acceptance: a *jax-backed* daemon over the same bundled
+    fixture journals decisions the tolerance audit confirms against
+    cold float64 re-ranks — same winners (or contract-tied), scores
+    within the ScoreContract, float32 drift surfaced rather than
+    silently absorbed — and the dynamic evaluation still beats the
+    static-price oracle."""
+    pytest.importorskip("jax")
+    from repro.core import costmodel, spark_sim
+    from repro.market import synthetic_stream
+    from repro.selector import GcpVmCatalog, score_contract
+    trace = spark_sim.generate_trace(seed=0)
+    store = ProfilingStore.from_trace(trace)
+    catalog = GcpVmCatalog(trace.configs, costmodel.LinearPriceModel())
+    svc = SelectionService(catalog, store, PriceTable.from_catalog(catalog),
+                           backend="jax")
+    daemon = SelectionDaemon(svc, RecordedPriceFeed.load(PRICE_FIXTURE))
+    daemon.run(synthetic_stream([j.name for j in trace.jobs], 400, seed=3,
+                                tick_fraction=0.15))
+    replayer = JournalReplayer(store, daemon.journal_dump())
+    assert replayer.backend == "jax"
+    audit = replayer.audit()
+    assert audit.ok, audit.mismatches[:3]
+    assert audit.contract == score_contract("jax")
+    assert audit.decisions > 100 and audit.ticks > 10
+    ev = replayer.evaluate()
+    assert ev.summary()["backend"] == "jax"
+    assert 0.0 <= ev.mean_deviation < 0.25
+    assert ev.mean_deviation < ev.static_mean_deviation
+
+
 if __name__ == "__main__":
     import sys
     if "--regen-golden" in sys.argv:
-        daemon = golden_daemon()
-        daemon.run(GOLDEN_STREAM)
-        with open(GOLDEN_JOURNAL, "w") as f:
-            f.write(daemon.journal_dump())
-        print(f"wrote {GOLDEN_JOURNAL}")
+        for backend, path in (("numpy", GOLDEN_JOURNAL),
+                              ("jax", GOLDEN_JOURNAL_JAX)):
+            daemon = golden_daemon(backend=backend)
+            daemon.run(GOLDEN_STREAM)
+            with open(path, "w") as f:
+                f.write(daemon.journal_dump())
+            print(f"wrote {path}")
     else:
         print(__doc__)
