@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python benchmarks/market_bench.py
 
-Two claims are enforced (ISSUE 2 acceptance):
+Four claims are enforced (ISSUE 2/4/5 acceptance — the script exits
+nonzero if a gated claim regresses, which is the CI gate):
 
   * incremental ``RankState.reprice`` beats a full ``rank_dense`` by >=5x
     at 10k configs with <=1% of prices changed per tick, with rankings
@@ -12,6 +13,16 @@ Two claims are enforced (ISSUE 2 acceptance):
     the ``+materialize`` row reports the tick+first-submission end-to-end
     cost, where building/sorting the C ``RankedConfig`` objects dominates
     *both* paths equally and compresses the ratio;
+  * the accelerator-resident jitted delta kernel (``JaxRankState``) beats
+    a cold ``rank_dense(backend="jax")`` per tick while staying inside
+    the jax ``ScoreContract`` (``reprice_jax_*`` rows);
+  * one batched dispatch reprices a whole fleet of >=8 live rankings
+    (``reprice_batched_*`` rows: ``one_dispatch_per_tick`` +
+    ``within_contract`` gates, DESIGN.md §10);
+  * device-side top-k serving beats the PR-4 materialize path end-to-end
+    by >=3x at 64x10k (``topk_serve_*`` rows: the ``end_to_end_speedup``
+    gate — one dispatch plus an O(k) readback versus per-state dispatches
+    plus a full C-config host sort);
   * ``SelectionDaemon`` sustains a 10k-event mixed submission/tick stream
     deterministically — the same seed yields a byte-identical journal.
 
@@ -29,13 +40,22 @@ import numpy as np
 from _bench_io import BenchRows
 from repro.core.trace import JobClass
 from repro.market import SelectionDaemon, SimulatedSpotFeed, synthetic_stream
-from repro.selector import (IdentityCatalog, JaxRankState, PriceTable,
-                            ProfilingStore, RankState, SelectionService,
-                            backend_available, rank_dense, score_contract)
+from repro.selector import (BatchedRankState, IdentityCatalog, JaxRankState,
+                            PriceTable, ProfilingStore, RankState,
+                            SelectionService, backend_available, rank_dense,
+                            score_contract)
 
 ROWS = BenchRows("BENCH_MARKET_JSON", "BENCH_market.json")
 emit = ROWS.emit
 write_json = ROWS.write_json
+
+#: gated claims that failed this run; main() exits nonzero on any.
+GATE_FAILURES: "list[str]" = []
+
+
+def gate(name: str, claim: str, ok: bool) -> None:
+    if not ok:
+        GATE_FAILURES.append(f"{name}: {claim}")
 
 
 # --- incremental reprice vs full rank_dense ----------------------------------
@@ -173,10 +193,185 @@ def bench_reprice_jax(n_jobs: int, n_cfgs: int, frac: float,
          f"beats_jax_cold={us_cold > us_delta};"
          f"within_contract={within};"
          f"contract=rel{contract.rel_tol:g}/abs{contract.abs_tol:g}")
+    gate(name, "delta kernel beats cold jax rank per tick",
+         us_cold > us_delta)
+    gate(name, "within_contract", within)
     emit(f"{name}+materialize", us_e2e,
          f"jax_cold_us={us_cold:.1f};"
          f"end_to_end_speedup={us_cold / us_e2e:.1f}x;"
          f"materialize_us={us_e2e - us_delta:.1f}")
+
+
+# --- batched fleet repricing + device-side top-k serving ----------------------
+
+def _fleet_members(n_jobs: int, n_states: int, rng) -> "dict[str, list]":
+    """Deterministic member row subsets (each a 30-90% slice of the job
+    axis) standing in for live (class, exclusion) selections."""
+    members = {}
+    for s in range(n_states):
+        size = max(2, int(n_jobs * rng.uniform(0.3, 0.9)))
+        members[f"s{s}"] = sorted(
+            int(i) for i in rng.choice(n_jobs, size, replace=False))
+    return members
+
+
+def _within_contract_vs_refs(batched, refs, members, contract) -> bool:
+    """Vectorized contract check of every member against its float64
+    incremental reference: all score accumulators inside the rel/abs
+    envelope, and the batched winner's *cold* score tied to the cold
+    best within the contract (the winner_matches discipline without
+    materializing 10k RankedConfigs per member per tick)."""
+    for key in members:
+        ref = refs[key]
+        b = batched.scores(key)
+        r = ref.scores
+        if not np.all(np.abs(b - r) <= contract.abs_tol
+                      + contract.rel_tol * np.maximum(np.abs(b),
+                                                      np.abs(r))):
+            return False
+        cold = np.where(ref.counts > 0, r, np.inf)
+        w = batched.top_k(key, 1)[0]
+        w_pos = batched.config_ids.index(w.config_id)
+        if not contract.scores_match(float(cold[w_pos]),
+                                     float(cold.min())):
+            return False
+    return True
+
+
+def bench_reprice_batched(n_jobs: int, n_cfgs: int, frac: float,
+                          n_states: int = 8, n_ticks: int = 10) -> None:
+    """ISSUE 5 acceptance: one batched dispatch per tick reprices a
+    fleet of >=8 live rankings (vs one dispatch per state on the PR-4
+    path), within the jax_batched ``ScoreContract`` of per-state
+    float64 references.  Gated: ``one_dispatch_per_tick`` +
+    ``within_contract``."""
+    name = f"reprice_batched_{n_jobs}x{n_cfgs}" + (
+        "" if n_states == 8 else f"_{n_states}states")
+    if not backend_available("jax_batched"):
+        emit(name, 0.0, "skipped=jax_unavailable")
+        return
+    hours, mask, prices, ids, rng = _universe(n_jobs, n_cfgs)
+    batches = _delta_batches(ids, prices, rng, n_ticks, frac)
+    members = _fleet_members(n_jobs, n_states, rng)
+    contract = score_contract("jax_batched")
+
+    # contract sweep (untimed): every member, every tick, vs the
+    # float64 incremental references
+    batched = BatchedRankState(hours, mask, prices, ids)
+    for key, rows in members.items():
+        batched.add_state(key, rows=rows)
+    refs = {key: RankState(hours[rows], mask[rows], prices.copy(), ids)
+            for key, rows in members.items()}
+    within = True
+    for batch in batches:
+        batched.reprice(batch)
+        for ref in refs.values():
+            ref.reprice(batch)
+        if not _within_contract_vs_refs(batched, refs, members, contract):
+            within = False
+            break
+
+    # timed: the whole fleet per tick — one batched dispatch vs one
+    # JaxRankState dispatch per member (warm the jits first so compile
+    # time is billed to neither side)
+    batched = BatchedRankState(hours, mask, prices, ids)
+    for key, rows in members.items():
+        batched.add_state(key, rows=rows)
+    batched.reprice(batches[0])
+    states = {key: JaxRankState(hours[rows], mask[rows], prices, ids)
+              for key, rows in members.items()}
+    for st in states.values():
+        st.reprice(batches[0])
+    batched = BatchedRankState(hours, mask, prices, ids)
+    for key, rows in members.items():
+        batched.add_state(key, rows=rows)
+    t0 = time.perf_counter()
+    for batch in batches:
+        batched.reprice(batch)
+    us_batched = (time.perf_counter() - t0) / n_ticks * 1e6
+    one_dispatch = batched.dispatches == n_ticks and \
+        batched.n_active == n_states
+    states = {key: JaxRankState(hours[rows], mask[rows], prices, ids)
+              for key, rows in members.items()}
+    t0 = time.perf_counter()
+    for batch in batches:
+        for st in states.values():
+            st.reprice(batch)
+    us_per_state = (time.perf_counter() - t0) / n_ticks * 1e6
+
+    emit(name, us_batched,
+         f"cells={n_jobs * n_cfgs};states={n_states};"
+         f"dispatches_per_tick={batched.dispatches / n_ticks:.2f};"
+         f"one_dispatch_per_tick={one_dispatch};"
+         f"per_state_us={us_per_state:.1f};"
+         f"speedup_vs_per_state={us_per_state / us_batched:.1f}x;"
+         f"within_contract={within};"
+         f"contract=rel{contract.rel_tol:g}/abs{contract.abs_tol:g}")
+    gate(name, f"one dispatch per tick for >= {n_states} live states",
+         one_dispatch)
+    gate(name, "within_contract", within)
+
+
+def bench_topk_serve(n_jobs: int, n_cfgs: int, frac: float,
+                     n_states: int = 8, k: int = 3,
+                     n_ticks: int = 10) -> None:
+    """ISSUE 5 acceptance: serving a tick + the head of one ranking via
+    the batched kernel and device-side ``top_k`` beats the PR-4
+    materialize path (per-state dispatches + a full C-config host
+    materialize/sort on the next submission) by >=3x end-to-end.
+    Gated: ``end_to_end_speedup`` — CI fails if it regresses below
+    3x."""
+    name = f"topk_serve_{n_jobs}x{n_cfgs}"
+    if not backend_available("jax_batched"):
+        emit(name, 0.0, "skipped=jax_unavailable")
+        return
+    hours, mask, prices, ids, rng = _universe(n_jobs, n_cfgs)
+    batches = _delta_batches(ids, prices, rng, n_ticks, frac)
+    members = _fleet_members(n_jobs, n_states, rng)
+    served = next(iter(members))
+
+    # PR-4 path: per-state dispatches, then the served class
+    # materializes+sorts its full ranking on the next submission
+    states = {key: JaxRankState(hours[rows], mask[rows], prices, ids)
+              for key, rows in members.items()}
+    for st in states.values():
+        st.reprice(batches[0])
+    states[served].ranking()
+    states = {key: JaxRankState(hours[rows], mask[rows], prices, ids)
+              for key, rows in members.items()}
+    t0 = time.perf_counter()
+    for batch in batches:
+        for st in states.values():
+            st.reprice(batch)
+        states[served].ranking()
+    us_materialize = (time.perf_counter() - t0) / n_ticks * 1e6
+
+    # the PR-5 path: one batched dispatch + an O(k) device head readback
+    batched = BatchedRankState(hours, mask, prices, ids)
+    for key, rows in members.items():
+        batched.add_state(key, rows=rows)
+    batched.reprice(batches[0])
+    batched.top_k(served, k)
+    batched = BatchedRankState(hours, mask, prices, ids)
+    for key, rows in members.items():
+        batched.add_state(key, rows=rows)
+    t0 = time.perf_counter()
+    for batch in batches:
+        batched.reprice(batch)
+        batched.top_k(served, k)
+    us_topk = (time.perf_counter() - t0) / n_ticks * 1e6
+    # head sanity (untimed): the served head IS the ranking's head
+    head_ok = batched.top_k(served, k) == batched.ranking(served)[:k]
+
+    speedup = us_materialize / us_topk
+    emit(name, us_topk,
+         f"cells={n_jobs * n_cfgs};states={n_states};k={k};"
+         f"materialize_us={us_materialize:.1f};"
+         f"end_to_end_speedup={speedup:.1f}x;"
+         f"target_3x={speedup >= 3.0};head_matches={head_ok}")
+    gate(name, f"end_to_end_speedup >= 3x (got {speedup:.1f}x)",
+         speedup >= 3.0)
+    gate(name, "top_k head matches materialized ranking", head_ok)
 
 
 # --- the 10k-event daemon stream ---------------------------------------------
@@ -225,12 +420,21 @@ def main(smoke: bool = False) -> None:
     bench_reprice(64, 1_000, 0.01)
     bench_reprice(64, 10_000, 0.01)
     bench_reprice_jax(64, 10_000, 0.01)
+    # the ISSUE 5 acceptance rows run in smoke mode too: CI gates them
+    bench_reprice_batched(64, 10_000, 0.01)
+    bench_topk_serve(64, 10_000, 0.01)
     if not smoke:
         bench_reprice(64, 10_000, 0.001)
         bench_reprice(256, 10_000, 0.01)
         bench_reprice_jax(64, 10_000, 0.001)
+        bench_reprice_batched(64, 10_000, 0.001, n_states=16)
     bench_daemon(2_000 if smoke else 10_000)
     write_json()
+    if GATE_FAILURES:
+        print("GATED CLAIMS FAILED:", file=sys.stderr)
+        for failure in GATE_FAILURES:
+            print(f"  {failure}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

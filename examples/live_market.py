@@ -47,12 +47,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--events", type=int, default=400)
     ap.add_argument("--seed", type=int, default=3)
-    ap.add_argument("--backend", default=None, choices=["numpy", "jax"],
+    ap.add_argument("--backend", default=None,
+                    choices=["numpy", "jax", "jax_batched"],
                     help="ranking backend (default: FLORA_RANK_BACKEND "
-                         "env var, else numpy)")
+                         "env var, else numpy); jax_batched stacks every "
+                         "live ranking into one batched kernel — a tick "
+                         "is ONE dispatch for the whole fleet "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--serve-top-k", type=int, default=None, metavar="K",
+                    help="serve Decisions with only the top-K head of "
+                         "the ranking (device-side top_k; the full "
+                         "C-config sort never runs)")
     args = ap.parse_args()
+    if args.serve_top_k is not None and args.serve_top_k < 1:
+        ap.error("--serve-top-k must be >= 1")
 
     service = build_service(backend=args.backend)
+    service.serve_top_k = args.serve_top_k
     feed = SimulatedSpotFeed(
         dict(service.price_source.items()), seed=args.seed,
         change_fraction=0.08, volatility=0.10,
@@ -72,9 +83,14 @@ def main() -> None:
           f"{stats.ticks} ticks, {stats.epochs} price epochs, "
           f"{stats.deltas} deltas")
     print(f"cache: {svc.cache_hits} hits / {svc.cache_misses} misses, "
-          f"{svc.reprice_refreshes} incremental refreshes "
+          f"{svc.reprice_refreshes} incremental refreshes in "
+          f"{svc.reprice_dispatches} kernel dispatches "
           f"(epoch now {svc.price_epoch})")
 
+    # the migration advisor below walks the ranking tail, so serve the
+    # closing submission with the full list even when the tick-stream
+    # Decisions were top-k heads
+    service.serve_top_k = None
     final = service.submit("decode_32k")
     print(f"\ncurrent winner under live prices: {final.config_id} "
           f"at {final.hourly_cost:.0f} $/h")

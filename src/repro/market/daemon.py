@@ -29,8 +29,10 @@ JOURNAL_FORMAT = "repro.market.decision-journal"
 #: carry the applied deltas, decision records carry the winner's score
 #: and the effective exclusion set.  Within v2, the header also stamps
 #: the service's ranking ``backend`` — replays pick their audit mode
-#: from it (numpy: bit-identical; jax: the tolerance contract,
-#: DESIGN.md §9); journals written before the stamp read as numpy.
+#: from it (numpy: bit-identical; jax/jax_batched: the tolerance
+#: contract, DESIGN.md §9-§10); journals written before the stamp read
+#: as numpy.  Decision records served via device-side top-k carry an
+#: additive ``served_via`` field (absent = full-ranking serving).
 #: Every version bump MUST add a migration note to the table in
 #: DESIGN.md §8.
 JOURNAL_VERSION = 2
@@ -119,7 +121,7 @@ class SelectionDaemon:
                           "price_epoch": self.service.price_epoch})
             return None
         self.stats.decisions += 1
-        self._record({
+        rec = {
             "kind": "decision", "seq": self._next_seq(),
             "job": decision.job_id,
             "job_class": (decision.job_class.value
@@ -130,7 +132,14 @@ class SelectionDaemon:
             "exclude_groups": list(decision.exclude_groups),
             "from_cache": decision.from_cache,
             "price_epoch": decision.price_epoch,
-        })
+        }
+        if decision.served_via != "ranking":
+            # additive field (DESIGN.md §8): stamped only for decisions
+            # served without a full ranking materialization (top-k
+            # head serving, §10) — absence means full-ranking serving,
+            # so journals from full-serving daemons keep their bytes
+            rec["served_via"] = decision.served_via
+        self._record(rec)
         return decision
 
     def run(self, events: Iterable[Event]) -> DaemonStats:

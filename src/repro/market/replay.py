@@ -258,6 +258,13 @@ class ReplayedDecision:
     #: the full ``{config_id: $/h}`` quote state at this decision
     #: (shared between decisions of the same epoch).
     prices: Mapping[Hashable, float]
+    #: how the daemon served the decision's ranking: ``"ranking"`` (the
+    #: default — full materialized list, and what journals without the
+    #: additive field mean) or ``"top_k"`` (device-side head serving,
+    #: DESIGN.md §10).  The audit treats both identically: a journaled
+    #: decision carries exactly the winner/score/$-per-hour fields either
+    #: way, and those are what the cold re-rank is held against.
+    served_via: str = "ranking"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -364,7 +371,8 @@ class JournalReplayer:
                 config_id=rec["config"], hourly_cost=rec["hourly_cost"],
                 score=rec["score"], price_epoch=rec["price_epoch"],
                 exclude_groups=tuple(rec.get("exclude_groups", ())),
-                prices=prices))
+                prices=prices,
+                served_via=rec.get("served_via", "ranking")))
         return out
 
     # -- the consistency audit ----------------------------------------------
@@ -395,16 +403,23 @@ class JournalReplayer:
           stamped price epoch are compared with exact equality.  JSON
           floats round-trip through ``repr``, so one ulp of drift
           anywhere in the reprice path surfaces here.
-        * **jax** — tolerance mode: the journaled winner must be the
-          cold winner or tied with it within the contract, and the
-          journaled score must be within rel/abs tolerance of that
-          config's cold score.  Within-contract divergence — float32
-          delta-accumulation drift (handoff-row renormalization above
-          all) and accepted near-tie winner swaps — is surfaced in
-          :attr:`ReplayAudit.drift`, never silently absorbed.  The $/h
-          and price-epoch comparisons stay exact: quotes flow through
-          the float64 :class:`~repro.selector.PriceTable` on every
-          backend.
+        * **jax / jax_batched** — tolerance mode: the journaled winner
+          must be the cold winner or tied with it within the contract,
+          and the journaled score must be within rel/abs tolerance of
+          that config's cold score.  Within-contract divergence —
+          float32 delta-accumulation drift (handoff-row renormalization
+          above all) and accepted near-tie winner swaps — is surfaced
+          in :attr:`ReplayAudit.drift`, never silently absorbed.  The
+          $/h and price-epoch comparisons stay exact: quotes flow
+          through the float64 :class:`~repro.selector.PriceTable` on
+          every backend.
+
+        Top-k-served decisions (``"served_via": "top_k"``, DESIGN.md
+        §10) audit through the same path with no special casing: the
+        journal record carries exactly the winner/score/$-per-hour
+        fields regardless of how much ranking tail the daemon
+        materialized, so the comparison against the cold re-rank is
+        unchanged.
 
         Rejections are audited identically in both modes: a journaled
         rejection whose (class, exclusions) re-ranks cold to a *valid*

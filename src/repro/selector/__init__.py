@@ -31,17 +31,19 @@ from repro.selector.catalog import (BaseCatalog, GcpVmCatalog,
                                     IdentityCatalog, PriceTable,
                                     ResourceCatalog, TpuSliceCatalog)
 from repro.selector.rank import (BACKEND_ENV_VAR, BACKENDS,
-                                 BackendUnavailableError, JaxRankState,
-                                 NothingRankableError, RankedConfig,
-                                 RankState, SCORE_CONTRACTS, ScoreContract,
-                                 backend_available, default_backend,
-                                 rank_dense, rank_pairs, score_contract)
+                                 BackendUnavailableError, BatchedRankState,
+                                 JaxRankState, NothingRankableError,
+                                 RankedConfig, RankState, SCORE_CONTRACTS,
+                                 ScoreContract, backend_available,
+                                 default_backend, rank_dense, rank_pairs,
+                                 score_contract)
 from repro.selector.store import ProfilingStore
 from repro.selector.service import Decision, SelectionService
 
 __all__ = [
     "BACKEND_ENV_VAR", "BACKENDS", "BackendUnavailableError", "BaseCatalog",
-    "Decision", "GcpVmCatalog", "IdentityCatalog", "JaxRankState",
+    "BatchedRankState", "Decision", "GcpVmCatalog", "IdentityCatalog",
+    "JaxRankState",
     "NothingRankableError", "PriceTable", "ProfilingStore", "RankState",
     "RankedConfig", "ResourceCatalog", "SCORE_CONTRACTS", "ScoreContract",
     "SelectionService", "TpuSliceCatalog", "backend_available",

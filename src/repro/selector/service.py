@@ -28,8 +28,9 @@ from typing import (Any, Callable, Dict, Hashable, Mapping, Optional,
 from repro.core.trace import JobClass
 from repro.selector.catalog import BaseCatalog, PriceTable
 from repro.selector.rank import (BACKENDS, BackendUnavailableError,
-                                 JaxRankState, NothingRankableError,
-                                 RankedConfig, RankState, backend_available,
+                                 BatchedRankState, JaxRankState,
+                                 NothingRankableError, RankedConfig,
+                                 RankState, backend_available,
                                  default_backend)
 from repro.selector.store import ProfilingStore
 
@@ -50,6 +51,13 @@ class Decision:
     #: (explicit argument, or the job's own group by default) — journal
     #: consumers need it to recompute the ranking cold (DESIGN.md §8).
     exclude_groups: Tuple[str, ...] = ()
+    #: how :attr:`ranking` was produced: ``"ranking"`` — the full sorted
+    #: list; ``"top_k"`` — only the head of the ranking was served
+    #: (device-side partial selection, DESIGN.md §10), so :attr:`ranking`
+    #: holds the first k entries and nothing below them.  The winner,
+    #: score and $/h fields are identical either way — journal audits
+    #: hold top-k-served decisions to the same contract (§8).
+    served_via: str = "ranking"
 
 
 class SelectionService:
@@ -59,7 +67,8 @@ class SelectionService:
                  price_source: Optional[Any] = None,
                  classifier: Optional[Callable[[Hashable],
                                                JobClass]] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 serve_top_k: Optional[int] = None):
         self.catalog = catalog
         self.store = store
         self.classifier = classifier
@@ -67,7 +76,10 @@ class SelectionService:
         #: (the ``FLORA_RANK_BACKEND`` env var — CI's backend matrix),
         #: else "numpy".  "numpy" serves the bit-identical float64
         #: contract; "jax" the accelerator-resident float32 tolerance
-        #: contract (DESIGN.md §9).
+        #: contract (DESIGN.md §9); "jax_batched" the same contract with
+        #: every live (class, exclusion) ranking stacked into one
+        #: :class:`BatchedRankState` — a tick is one kernel dispatch for
+        #: the whole fleet (DESIGN.md §10).
         self.backend = backend if backend is not None else default_backend()
         # fail at construction, not first submit: a service that can
         # never rank is misconfiguration the caller should see now
@@ -79,19 +91,45 @@ class SelectionService:
             raise BackendUnavailableError(
                 f"backend={self.backend!r} requested but its runtime "
                 f"dependency is not installed")
+        #: default serving depth: ``None`` serves full rankings
+        #: (``Decision.served_via == "ranking"``); a positive int makes
+        #: ``submit`` serve only the top-k head of the ranking — the
+        #: full C-config materialize/sort never runs (DESIGN.md §10).
+        #: Overridable per submission via ``submit(..., top_k=)``.
+        if serve_top_k is not None and (
+                not isinstance(serve_top_k, int)
+                or isinstance(serve_top_k, bool) or serve_top_k < 1):
+            raise ValueError(f"serve_top_k must be a positive int or "
+                             f"None, got {serve_top_k!r}")
+        self.serve_top_k = serve_top_k
         self._price_source = price_source
         self._price_epoch = 0
         self._cache: Dict[Tuple, Tuple[RankedConfig, ...]] = {}
+        #: top-k heads served without a full materialization, keyed like
+        #: the ranking cache plus the depth k.
+        self._head_cache: Dict[Tuple, Tuple[RankedConfig, ...]] = {}
         #: live incremental states, keyed like the cache but without the
         #: price tag — a reprice mutates them in place across epochs.
+        #: Unused by the "jax_batched" backend, whose fleet lives inside
+        #: the one shared :attr:`_batched` state instead.
         self._states: Dict[Tuple, RankState] = {}
         #: price tag each state was last (re)priced under; a state is only
         #: served when its tag matches the current one.
         self._state_tags: Dict[Tuple, Tuple] = {}
+        # the "jax_batched" fleet: one BatchedRankState over the full
+        # store, members keyed by base_key, plus the tag/store version
+        # it is in sync with
+        self._batched: Optional[BatchedRankState] = None
+        self._batched_tag: Optional[Tuple] = None
+        self._batched_store_version: Optional[int] = None
         self.cache_hits = 0
         self.cache_misses = 0
         #: rankings refreshed via the incremental path (not full recomputes).
         self.reprice_refreshes = 0
+        #: kernel dispatches spent repricing: one per live state per tick
+        #: for the per-state backends, exactly one per tick for
+        #: "jax_batched" regardless of fleet size (the soak/bench gate).
+        self.reprice_dispatches = 0
 
     # -- price management ---------------------------------------------------
     @property
@@ -111,8 +149,12 @@ class SelectionService:
         """Bump the price epoch (e.g. the same mutable source re-quoted)."""
         self._price_epoch += 1
         self._cache.clear()
+        self._head_cache.clear()
         self._states.clear()
         self._state_tags.clear()
+        self._batched = None
+        self._batched_tag = None
+        self._batched_store_version = None
 
     def price_snapshot(self) -> Tuple[int, Tuple[Tuple[Hashable, float],
                                                  ...]]:
@@ -167,25 +209,132 @@ class SelectionService:
         self._price_source.apply(deltas)
         self._price_epoch += 1
         self._cache.clear()
+        self._head_cache.clear()
         tag = self._price_tag()
         refreshed = 0
-        for key, state in list(self._states.items()):
-            store_version = key[0]
-            if store_version != self.store.version or \
-                    self._state_tags.get(key) != prev_tag:
-                # stale trace, or a state that missed an out-of-band
+        if self.backend == "jax_batched":
+            # the whole fleet refreshes in ONE kernel dispatch
+            if self._batched is not None and (
+                    self._batched_store_version != self.store.version
+                    or self._batched_tag != prev_tag):
+                # stale trace, or a universe that missed an out-of-band
                 # table.apply before this tick: repricing it would serve
                 # quotes it never saw — drop it, rebuild cold on demand
-                del self._states[key]
-                self._state_tags.pop(key, None)
-                continue
-            state.reprice(deltas)
-            self._state_tags[key] = tag
-            refreshed += 1
+                self._batched = None
+                self._batched_tag = None
+                self._batched_store_version = None
+            if self._batched is not None:
+                self._batched.reprice(deltas)
+                self._batched_tag = tag
+                self.reprice_dispatches += 1
+                refreshed = self._batched.n_active
+        else:
+            for key, state in list(self._states.items()):
+                store_version = key[0]
+                if store_version != self.store.version or \
+                        self._state_tags.get(key) != prev_tag:
+                    # stale trace, or a state that missed an out-of-band
+                    # table.apply before this tick: repricing it would
+                    # serve quotes it never saw — drop it, rebuild cold
+                    # on demand
+                    del self._states[key]
+                    self._state_tags.pop(key, None)
+                    continue
+                state.reprice(deltas)
+                self._state_tags[key] = tag
+                self.reprice_dispatches += 1
+                refreshed += 1
         self.reprice_refreshes += refreshed
         return refreshed
 
     # -- ranking (cached) ----------------------------------------------------
+    def _live_serving(self, base_key: Tuple, tag: Tuple
+                      ) -> Optional[Tuple[Callable[[], Sequence[RankedConfig]],
+                                          Callable[[int],
+                                                   Sequence[RankedConfig]]]]:
+        """``(ranking_fn, top_k_fn)`` bound to an in-sync live state for
+        ``base_key`` (repriced incrementally on the last tick — serving
+        from it is a cache hit, no ranking recompute happened), or
+        ``None`` when the selection must be built cold."""
+        if self.backend == "jax_batched":
+            b = self._batched
+            if b is not None and self._batched_tag == tag and \
+                    self._batched_store_version == self.store.version \
+                    and base_key in b:
+                return (lambda: b.ranking(base_key),
+                        lambda k: b.top_k(base_key, k))
+            return None
+        state = self._states.get(base_key)
+        if state is not None and self._state_tags.get(base_key) == tag:
+            return state.ranking, state.top_k
+        return None
+
+    def _build_serving(self, base_key: Tuple, tag: Tuple,
+                       job_class: Optional[JobClass],
+                       exclude_groups: Sequence[str]
+                       ) -> Tuple[Callable[[], Sequence[RankedConfig]],
+                                  Callable[[int], Sequence[RankedConfig]]]:
+        """Cold-build the live state serving ``base_key`` and return its
+        ``(ranking_fn, top_k_fn)``.  Per-state backends build one
+        RankState/JaxRankState over the selection's rows; "jax_batched"
+        registers the selection as a member of the one shared
+        :class:`BatchedRankState` over the full store (building that
+        universe first if the trace or price tag moved on)."""
+        jobs = self.store.select_jobs(job_class=job_class,
+                                      exclude_groups=exclude_groups)
+        if not jobs:
+            raise NothingRankableError("no test jobs to learn from")
+        config_ids = self.catalog.ids()
+        prices = self.catalog.price_vector(self._price_source)
+        if self.backend == "jax_batched":
+            b = self._batched
+            if b is None or \
+                    self._batched_store_version != self.store.version \
+                    or self._batched_tag != tag:
+                all_jobs = self.store.job_ids
+                hours, mask = self.store.matrix(job_ids=all_jobs,
+                                                config_ids=config_ids)
+                b = BatchedRankState(hours, mask, prices, config_ids,
+                                     job_ids=all_jobs)
+                self._batched = b
+                self._batched_tag = tag
+                self._batched_store_version = self.store.version
+            if base_key not in b:
+                b.add_state(base_key, jobs=jobs)
+            return (lambda: b.ranking(base_key),
+                    lambda k: b.top_k(base_key, k))
+        hours, mask = self.store.matrix(job_ids=jobs, config_ids=config_ids)
+        # build through a live state so later reprices are incremental:
+        # RankState's arithmetic is the cold numpy path verbatim
+        # (bit-identical); JaxRankState serves the accelerator-resident
+        # float32 tolerance contract (DESIGN.md §9).
+        if self.backend == "numpy":
+            state_cls = RankState
+        elif self.backend == "jax":
+            state_cls = JaxRankState
+        else:
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             f"(expected one of {BACKENDS})")
+        for stale in [k for k in self._states
+                      if k[0] != self.store.version]:
+            del self._states[stale]
+            self._state_tags.pop(stale, None)
+        state = state_cls(hours, mask, prices, config_ids, job_ids=jobs)
+        self._states[base_key] = state
+        self._state_tags[base_key] = tag
+        return state.ranking, state.top_k
+
+    def _prune_caches(self, tag: Tuple) -> None:
+        # a miss means the tag (or trace) moved on; entries under dead
+        # tags or store versions are unreachable forever (epoch, table
+        # version and store version are all monotonic) — prune them so
+        # out-of-band table.apply + submit cycles don't grow the caches
+        # without bound
+        for cache in (self._cache, self._head_cache):
+            for stale in [k for k in cache
+                          if k[:2] != tag or k[2] != self.store.version]:
+                del cache[stale]
+
     def rank_cached(self, job_class: Optional[JobClass] = None,
                     exclude_groups: Sequence[str] = ()
                     ) -> Tuple[Tuple[RankedConfig, ...], bool]:
@@ -205,50 +354,61 @@ class SelectionService:
         if hit is not None:
             self.cache_hits += 1
             return hit, True
-        state = self._states.get(base_key)
-        if state is not None and self._state_tags.get(base_key) == tag:
+        live = self._live_serving(base_key, tag)
+        if live is not None:
             # repriced incrementally on the last tick; materialize lazily
-            ranking = tuple(state.ranking())
+            ranking = tuple(live[0]())
             self._cache[key] = ranking
             self.cache_hits += 1
             return ranking, True
         self.cache_misses += 1
-        # a miss means the tag (or trace) moved on; entries under dead
-        # tags or store versions are unreachable forever (epoch, table
-        # version and store version are all monotonic) — prune them so
-        # out-of-band table.apply + submit cycles don't grow the cache
-        # without bound
-        for stale in [k for k in self._cache
-                      if k[:2] != tag or k[2] != self.store.version]:
-            del self._cache[stale]
-        jobs = self.store.select_jobs(job_class=job_class,
-                                      exclude_groups=exclude_groups)
-        if not jobs:
-            raise NothingRankableError("no test jobs to learn from")
-        config_ids = self.catalog.ids()
-        hours, mask = self.store.matrix(job_ids=jobs, config_ids=config_ids)
-        prices = self.catalog.price_vector(self._price_source)
-        # build through a live state so later reprices are incremental:
-        # RankState's arithmetic is the cold numpy path verbatim
-        # (bit-identical); JaxRankState serves the accelerator-resident
-        # float32 tolerance contract (DESIGN.md §9).
-        if self.backend == "numpy":
-            state_cls = RankState
-        elif self.backend == "jax":
-            state_cls = JaxRankState
-        else:
-            raise ValueError(f"unknown backend {self.backend!r} "
-                             f"(expected one of {BACKENDS})")
-        for stale in [k for k in self._states
-                      if k[0] != self.store.version]:
-            del self._states[stale]
-            self._state_tags.pop(stale, None)
-        state = state_cls(hours, mask, prices, config_ids, job_ids=jobs)
-        self._states[base_key] = state
-        self._state_tags[base_key] = tag
-        ranking = tuple(state.ranking())
+        self._prune_caches(tag)
+        serving = self._build_serving(base_key, tag, job_class,
+                                      exclude_groups)
+        ranking = tuple(serving[0]())
         self._cache[key] = ranking
         return ranking, False
+
+    def rank_head(self, job_class: Optional[JobClass] = None,
+                  exclude_groups: Sequence[str] = (), *, k: int
+                  ) -> Tuple[Tuple[RankedConfig, ...], bool]:
+        """The top-``k`` head of the ranking for a class; returns
+        ``(head, from_cache)`` — the lazy serving path (DESIGN.md §10):
+        when only the head is needed, the full C-config ranking is never
+        materialized.  A cached full ranking is reused when present
+        (its head is free); otherwise the head comes straight off the
+        live state's score buffer (``jax.lax.top_k`` on the jax-family
+        backends, a partial selection on numpy) and is cached per
+        ``(tag, selection, k)``."""
+        if not isinstance(k, int) or isinstance(k, bool) or k < 1:
+            raise ValueError(f"rank_head needs a positive integer k, "
+                             f"got {k!r}")
+        base_key = (self.store.version, job_class,
+                    tuple(sorted(exclude_groups)))
+        tag = self._price_tag()
+        key = tag + base_key
+        full = self._cache.get(key)
+        if full is not None:
+            self.cache_hits += 1
+            return full[:k], True
+        head_key = key + (k,)
+        hit = self._head_cache.get(head_key)
+        if hit is not None:
+            self.cache_hits += 1
+            return hit, True
+        live = self._live_serving(base_key, tag)
+        if live is not None:
+            head = tuple(live[1](k))
+            self._head_cache[head_key] = head
+            self.cache_hits += 1
+            return head, True
+        self.cache_misses += 1
+        self._prune_caches(tag)
+        serving = self._build_serving(base_key, tag, job_class,
+                                      exclude_groups)
+        head = tuple(serving[1](k))
+        self._head_cache[head_key] = head
+        return head, False
 
     def rank(self, job_class: Optional[JobClass] = None,
              exclude_groups: Sequence[str] = ()
@@ -287,16 +447,31 @@ class SelectionService:
     def submit(self, job_id: Hashable, *,
                annotation: Optional[JobClass] = None,
                exclude_groups: Optional[Sequence[str]] = None,
-               one_class: bool = False) -> Decision:
+               one_class: bool = False,
+               top_k: Optional[int] = None) -> Decision:
         """Classify, rank under current prices, pick the argmin.
 
         ``exclude_groups`` defaults to the job's own group when the job is
         already profiled (see :meth:`effective_exclusions`).
+
+        ``top_k`` (default: the service's :attr:`serve_top_k`) switches
+        the Decision to head-only serving: its ``ranking`` holds the
+        first k entries (``served_via == "top_k"``) and the full sorted
+        list is never materialized.  Winner, score and $/h are identical
+        to full-ranking serving by construction (DESIGN.md §10).
         """
         klass = None if one_class else self.classify(job_id, annotation)
         exclude_groups = self.effective_exclusions(job_id, exclude_groups)
-        ranking, from_cache = self.rank_cached(
-            job_class=klass, exclude_groups=tuple(exclude_groups))
+        k = top_k if top_k is not None else self.serve_top_k
+        if k is None:
+            ranking, from_cache = self.rank_cached(
+                job_class=klass, exclude_groups=tuple(exclude_groups))
+            served_via = "ranking"
+        else:
+            ranking, from_cache = self.rank_head(
+                job_class=klass, exclude_groups=tuple(exclude_groups),
+                k=k)
+            served_via = "top_k"
         winner = ranking[0]
         if winner.score == float("inf"):
             # every catalog entry is unprofiled for this selection
@@ -312,4 +487,5 @@ class SelectionService:
                                                  self._price_source),
             ranking=ranking, from_cache=from_cache,
             price_epoch=self._price_epoch,
-            exclude_groups=tuple(exclude_groups))
+            exclude_groups=tuple(exclude_groups),
+            served_via=served_via)
