@@ -19,6 +19,13 @@ package makes "current" a live property instead of a one-shot argument
   migration -- :func:`should_migrate`: hysteresis advisor so a running
                fleet only moves when projected savings beat the switch
                cost (wired into ``serve.engine.plan_decode_placement``);
+  frontend  -- :class:`ServeFrontend`: the concurrent serving layer —
+               one tick thread owns the repricing and publishes an
+               immutable :class:`Snapshot` (per-selection top-k heads)
+               per tick; N workers serve :class:`~repro.selector.Decision`\\ s
+               lock-free off the latest snapshot, with bounded queues,
+               explicit shed, and worker-sharded journals merged into
+               one deterministic, audit-clean journal (DESIGN.md §11);
   replay    -- :class:`RecordedPriceFeed` / :func:`record_feed`: price
                histories as replayable CSV fixtures, and
                :class:`JournalReplayer`: audit a decision journal against
@@ -28,8 +35,10 @@ package makes "current" a live property instead of a one-shot argument
 """
 from repro.market.daemon import (DaemonStats, SelectionDaemon, Submission,
                                  Tick, synthetic_stream)
-from repro.market.feed import (MarketEvent, PriceDelta, PriceFeed,
+from repro.market.feed import (FeedError, MarketEvent, PriceDelta, PriceFeed,
                                SimulatedSpotFeed)
+from repro.market.frontend import (FrontendStats, ServeFrontend, Snapshot,
+                                   SnapshotEntry, merge_shards)
 from repro.market.migration import MigrationAdvice, should_migrate
 from repro.market.replay import (JournalReplayer, RecordedPriceFeed,
                                  ReplayAudit, ReplayMismatch,
@@ -37,9 +46,10 @@ from repro.market.replay import (JournalReplayer, RecordedPriceFeed,
 from repro.market.ticker import PriceTicker
 
 __all__ = [
-    "DaemonStats", "JournalReplayer", "MarketEvent", "MigrationAdvice",
-    "PriceDelta", "PriceFeed", "PriceTicker", "RecordedPriceFeed",
-    "ReplayAudit", "ReplayMismatch", "ReplayedDecision", "SelectionDaemon",
-    "SimulatedSpotFeed", "Submission", "Tick", "record_feed",
-    "should_migrate", "synthetic_stream",
+    "DaemonStats", "FeedError", "FrontendStats", "JournalReplayer",
+    "MarketEvent", "MigrationAdvice", "PriceDelta", "PriceFeed",
+    "PriceTicker", "RecordedPriceFeed", "ReplayAudit", "ReplayMismatch",
+    "ReplayedDecision", "SelectionDaemon", "ServeFrontend",
+    "SimulatedSpotFeed", "Snapshot", "SnapshotEntry", "Submission", "Tick",
+    "merge_shards", "record_feed", "should_migrate", "synthetic_stream",
 ]

@@ -20,7 +20,7 @@ from typing import (Any, Dict, Hashable, Iterable, Iterator, List, Optional,
 
 from repro.core.trace import JobClass
 from repro.selector import Decision, NothingRankableError, SelectionService
-from repro.market.feed import PriceFeed, hash_uniform
+from repro.market.feed import FeedError, PriceDelta, PriceFeed, hash_uniform
 from repro.market.ticker import PriceTicker
 
 JOURNAL_FORMAT = "repro.market.decision-journal"
@@ -32,10 +32,73 @@ JOURNAL_FORMAT = "repro.market.decision-journal"
 #: from it (numpy: bit-identical; jax/jax_batched: the tolerance
 #: contract, DESIGN.md §9-§10); journals written before the stamp read
 #: as numpy.  Decision records served via device-side top-k carry an
-#: additive ``served_via`` field (absent = full-ranking serving).
+#: additive ``served_via`` field (absent = full-ranking serving); a
+#: feed that raises mid-tick journals an additive ``feed-error`` record
+#: kind (the tick is retried; prices stay at the last good epoch); and
+#: journals merged from the concurrent front-end
+#: (:mod:`repro.market.frontend`) stamp decisions/rejections with
+#: additive ``worker`` / ``snapshot_tick`` fields and tick/feed-error
+#: records with ``worker`` / ``tick`` — consumers skip unknown fields
+#: and record kinds, so none of these bump the version.
 #: Every version bump MUST add a migration note to the table in
 #: DESIGN.md §8.
 JOURNAL_VERSION = 2
+
+
+# -- shared record builders --------------------------------------------------
+# The daemon and the concurrent front-end (repro.market.frontend)
+# journal the *same* record shapes — built here once, so the
+# byte-exactness contract (numpy journals golden-file identical) can
+# never fork between the two serving layers.
+
+def tick_record(seq: int, deltas: Sequence[PriceDelta],
+                price_epoch: int) -> Dict[str, Any]:
+    return {"kind": "tick", "seq": seq, "deltas": len(deltas),
+            "applied": [[d.config_id, d.price] for d in deltas],
+            "price_epoch": price_epoch}
+
+
+def decision_record(seq: int, decision: Decision) -> Dict[str, Any]:
+    rec = {
+        "kind": "decision", "seq": seq,
+        "job": decision.job_id,
+        "job_class": (decision.job_class.value
+                      if decision.job_class else None),
+        "config": decision.config_id,
+        "hourly_cost": decision.hourly_cost,
+        "score": decision.ranking[0].score,
+        "exclude_groups": list(decision.exclude_groups),
+        "from_cache": decision.from_cache,
+        "price_epoch": decision.price_epoch,
+    }
+    if decision.served_via != "ranking":
+        # additive field (DESIGN.md §8): stamped only for decisions
+        # served without a full ranking materialization (top-k head
+        # serving, §10) — absence means full-ranking serving, so
+        # journals from full-serving daemons keep their bytes
+        rec["served_via"] = decision.served_via
+    return rec
+
+
+def rejection_record(seq: int, job_id: Hashable,
+                     job_class: Optional[JobClass],
+                     exclude_groups: Sequence[str],
+                     price_epoch: int) -> Dict[str, Any]:
+    return {"kind": "rejected", "seq": seq, "job": job_id,
+            "job_class": job_class.value if job_class else None,
+            "exclude_groups": list(exclude_groups),
+            "price_epoch": price_epoch}
+
+
+def feed_error_record(seq: int, tick: int, error: str, failures: int,
+                      price_epoch: int) -> Dict[str, Any]:
+    """Additive record kind (DESIGN.md §8): ``feed.poll`` raised at
+    ``tick`` (the tick is being retried; ``failures`` counts the
+    consecutive failures so far) and prices stayed at ``price_epoch``.
+    Replay consumers skip unknown kinds, so audits are unchanged."""
+    return {"kind": "feed-error", "seq": seq, "tick": tick,
+            "error": error, "failures": failures,
+            "price_epoch": price_epoch}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +127,7 @@ class DaemonStats:
     ticks: int = 0              # mirrors PriceTicker.tick_count
     deltas: int = 0             # mirrors PriceTicker.deltas_applied
     epochs: int = 0             # mirrors PriceTicker.epochs_driven
+    feed_errors: int = 0        # polls that raised (tick retried)
 
 
 class SelectionDaemon:
@@ -83,23 +147,34 @@ class SelectionDaemon:
             # string keys, which would corrupt non-string config ids
             "prices": [[c, p] for c, p in prices]})]
         self._seq = 0
+        self._feed_failures = 0     # consecutive; resets on a good tick
 
     # -- event handling ------------------------------------------------------
     def handle(self, event: Event) -> Optional[Decision]:
         """Process one event; returns the Decision for submissions."""
         self.stats.events += 1
         if isinstance(event, Tick):
-            deltas = self.ticker.tick()
+            try:
+                deltas = self.ticker.tick()
+            except FeedError as exc:
+                # typed failure path: the feed died mid-tick, the tick
+                # index was not consumed (the next Tick retries it) and
+                # prices stayed at the last good epoch — journal the
+                # event and keep serving instead of dying
+                self.stats.feed_errors += 1
+                self._feed_failures += 1
+                self._record(feed_error_record(
+                    self._next_seq(), exc.tick, str(exc),
+                    self._feed_failures, self.service.price_epoch))
+                return None
+            self._feed_failures = 0
             # the ticker owns the tick bookkeeping; mirror, don't re-count
             self.stats.ticks = self.ticker.tick_count
             self.stats.deltas = self.ticker.deltas_applied
             self.stats.epochs = self.ticker.epochs_driven
             if deltas:
-                self._record({
-                    "kind": "tick", "seq": self._next_seq(),
-                    "deltas": len(deltas),
-                    "applied": [[d.config_id, d.price] for d in deltas],
-                    "price_epoch": self.service.price_epoch})
+                self._record(tick_record(self._next_seq(), deltas,
+                                         self.service.price_epoch))
             return None
         self.stats.submissions += 1
         try:
@@ -108,38 +183,19 @@ class SelectionDaemon:
                 exclude_groups=event.exclude_groups)
         except NothingRankableError:
             # nothing rankable for this submission (empty class, id
-            # mismatch): journal the rejection, keep serving — any other
-            # ValueError is misconfiguration and propagates
+            # mismatch, retired member): journal the rejection, keep
+            # serving — any other ValueError is misconfiguration and
+            # propagates
             self.stats.rejected += 1
             klass = self.service.classify(event.job_id, event.annotation)
             excl = self.service.effective_exclusions(event.job_id,
                                                      event.exclude_groups)
-            self._record({"kind": "rejected", "seq": self._next_seq(),
-                          "job": event.job_id,
-                          "job_class": klass.value if klass else None,
-                          "exclude_groups": list(excl),
-                          "price_epoch": self.service.price_epoch})
+            self._record(rejection_record(
+                self._next_seq(), event.job_id, klass, excl,
+                self.service.price_epoch))
             return None
         self.stats.decisions += 1
-        rec = {
-            "kind": "decision", "seq": self._next_seq(),
-            "job": decision.job_id,
-            "job_class": (decision.job_class.value
-                          if decision.job_class else None),
-            "config": decision.config_id,
-            "hourly_cost": decision.hourly_cost,
-            "score": decision.ranking[0].score,
-            "exclude_groups": list(decision.exclude_groups),
-            "from_cache": decision.from_cache,
-            "price_epoch": decision.price_epoch,
-        }
-        if decision.served_via != "ranking":
-            # additive field (DESIGN.md §8): stamped only for decisions
-            # served without a full ranking materialization (top-k
-            # head serving, §10) — absence means full-ranking serving,
-            # so journals from full-serving daemons keep their bytes
-            rec["served_via"] = decision.served_via
-        self._record(rec)
+        self._record(decision_record(self._next_seq(), decision))
         return decision
 
     def run(self, events: Iterable[Event]) -> DaemonStats:

@@ -51,6 +51,24 @@ def hash_uniform(seed: int, *key: object) -> float:
     return (hash_digest(seed, *key) + 1) / (2 ** 64 + 2)
 
 
+class FeedError(RuntimeError):
+    """A feed failed to produce its batch for a tick.
+
+    Raised by :class:`~repro.market.PriceTicker` when ``feed.poll``
+    raises (a live billing API timing out, a recording truncated
+    mid-read); the original exception rides along as ``__cause__`` and
+    :attr:`tick` names the tick that failed.  Typed so serving layers
+    can journal a ``feed-error`` record and keep serving off the last
+    good price epoch — the failed tick index was *not* consumed, so the
+    next poll retries the same tick — instead of dying mid-stream.
+    """
+
+    def __init__(self, message: str, tick: int):
+        super().__init__(message)
+        #: the tick index whose poll failed (and will be retried).
+        self.tick = tick
+
+
 @dataclasses.dataclass(frozen=True)
 class PriceDelta:
     """One absolute re-quote: ``config_id`` now costs ``price`` $/h."""

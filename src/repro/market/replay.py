@@ -265,6 +265,14 @@ class ReplayedDecision:
     #: decision carries exactly the winner/score/$-per-hour fields either
     #: way, and those are what the cold re-rank is held against.
     served_via: str = "ranking"
+    #: additive front-end provenance (DESIGN.md §8/§11): the serving
+    #: shard (0 = the tick thread's control path, 1..N = snapshot
+    #: workers) and the tick of the snapshot the decision was served
+    #: off.  ``None`` for single-threaded daemon journals — the audit
+    #: ignores both either way (the stamped price epoch is what the
+    #: cold re-rank is pinned to).
+    worker: Optional[int] = None
+    snapshot_tick: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -300,6 +308,10 @@ class ReplayAudit:
     drift: Tuple[ReplayMismatch, ...] = ()
     #: the contract the audit ran under (None = pre-contract caller)
     contract: Optional[ScoreContract] = None
+    #: ``feed-error`` records walked past (additive kind, DESIGN.md §8):
+    #: ticks whose poll raised and was retried — prices never moved, so
+    #: they are provenance, not a failure condition.
+    feed_errors: int = 0
 
     @property
     def ok(self) -> bool:
@@ -372,7 +384,9 @@ class JournalReplayer:
                 score=rec["score"], price_epoch=rec["price_epoch"],
                 exclude_groups=tuple(rec.get("exclude_groups", ())),
                 prices=prices,
-                served_via=rec.get("served_via", "ranking")))
+                served_via=rec.get("served_via", "ranking"),
+                worker=rec.get("worker"),
+                snapshot_tick=rec.get("snapshot_tick")))
         return out
 
     # -- the consistency audit ----------------------------------------------
@@ -433,7 +447,7 @@ class JournalReplayer:
         """
         if contract is None:
             contract = score_contract(self.backend)
-        n_dec = n_tick = n_rej = 0
+        n_dec = n_tick = n_rej = n_feed = 0
         mismatches: List[ReplayMismatch] = []
         drift: List[ReplayMismatch] = []
         rank_memo: Dict[Tuple, Any] = {}
@@ -464,6 +478,14 @@ class JournalReplayer:
             kind = rec.get("kind")
             if kind == "tick":
                 n_tick += 1
+                if rec["price_epoch"] != epoch:
+                    differ(rec["seq"], None, "price_epoch",
+                           rec["price_epoch"], epoch)
+                continue
+            if kind == "feed-error":
+                # additive kind: a poll that raised and was retried —
+                # no price movement, nothing to verify beyond the epoch
+                n_feed += 1
                 if rec["price_epoch"] != epoch:
                     differ(rec["seq"], None, "price_epoch",
                            rec["price_epoch"], epoch)
@@ -514,7 +536,8 @@ class JournalReplayer:
                 differ(seq, job, "hourly_cost", rec["hourly_cost"], quote)
         return ReplayAudit(decisions=n_dec, ticks=n_tick, rejected=n_rej,
                            mismatches=tuple(mismatches),
-                           drift=tuple(drift), contract=contract)
+                           drift=tuple(drift), contract=contract,
+                           feed_errors=n_feed)
 
     # -- dynamic-price evaluation -------------------------------------------
     def evaluate(self, base_prices: Optional[Mapping[Hashable, float]]

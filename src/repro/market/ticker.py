@@ -13,7 +13,7 @@ from __future__ import annotations
 from typing import Dict, Hashable, Tuple
 
 from repro.selector import PriceTable, SelectionService
-from repro.market.feed import PriceDelta, PriceFeed
+from repro.market.feed import FeedError, PriceDelta, PriceFeed
 
 
 class PriceTicker:
@@ -32,8 +32,22 @@ class PriceTicker:
         self.epochs_driven = 0
 
     def tick(self) -> Tuple[PriceDelta, ...]:
-        """Poll one batch and apply it; returns the batch."""
-        deltas = self.feed.poll(self.tick_count)
+        """Poll one batch and apply it; returns the batch.
+
+        A ``feed.poll`` that raises surfaces as a typed
+        :class:`~repro.market.FeedError` (original exception as
+        ``__cause__``) **before** the tick index is consumed, so the
+        next :meth:`tick` retries the same tick — prices stay at the
+        last good epoch, never half-applied.  Errors from applying a
+        successfully polled batch (``reprice``) are service
+        misconfiguration and propagate untyped.
+        """
+        try:
+            deltas = self.feed.poll(self.tick_count)
+        except Exception as exc:
+            raise FeedError(
+                f"feed.poll failed at tick {self.tick_count}: "
+                f"{type(exc).__name__}: {exc}", self.tick_count) from exc
         self.tick_count += 1
         if deltas:
             table: Dict[Hashable, float] = {d.config_id: d.price

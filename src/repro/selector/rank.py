@@ -904,6 +904,10 @@ class BatchedRankState:
         cap = self._CAPACITY_BASE if capacity is None else max(1, capacity)
         self._capacity = cap
         self._slots: "dict[Hashable, int]" = {}
+        #: keys retired via :meth:`retire_state`; serving one raises
+        #: :class:`NothingRankableError` (a never-registered key stays a
+        #: plain ``ValueError`` — that is caller misconfiguration).
+        self._retired: "set" = set()
         self._free: List[int] = list(range(cap - 1, -1, -1))
         self.d_row_masks = jnp.zeros((cap, self._n_jobs),
                                      dtype=jnp.float32)
@@ -938,6 +942,13 @@ class BatchedRankState:
         try:
             return self._slots[key]
         except KeyError:
+            if key in self._retired:
+                # a member that *was* live and has been retired: serving
+                # it is a rankable-nothing condition, not a caller bug —
+                # typed so the service/daemon path journals a genuine
+                # rejection instead of dying on the masked slot
+                raise NothingRankableError(
+                    f"member state {key!r} was retired")
             raise ValueError(f"unknown member state {key!r}")
 
     def _grow(self) -> None:
@@ -987,6 +998,7 @@ class BatchedRankState:
         immediately in sync with every tick applied so far."""
         if key in self._slots:
             raise ValueError(f"duplicate member state {key!r}")
+        self._retired.discard(key)      # re-registering revives the key
         idx = self._rows_of(rows, jobs)
         if not self._free:
             self._grow()
@@ -1006,7 +1018,11 @@ class BatchedRankState:
 
     def retire_state(self, key: Hashable) -> None:
         """Drop a member: its slot is zero-masked (contributes nothing
-        to later ticks) and reused by the next :meth:`add_state`."""
+        to later ticks) and reused by the next :meth:`add_state`.
+        Serving a retired key afterwards raises
+        :class:`NothingRankableError` — never a raw ``KeyError`` or a
+        masked-slot score — so service/daemon callers journal a genuine
+        rejection (DESIGN.md §10)."""
         slot = self._slots.pop(key, None)
         if slot is None:
             raise ValueError(f"unknown member state {key!r}")
@@ -1018,6 +1034,7 @@ class BatchedRankState:
         self._d_finite = self._d_finite.at[slot].set(
             jnp.zeros(len(self.config_ids), dtype=bool))
         self._ranking_memo.pop(key, None)
+        self._retired.add(key)
         self._free.append(slot)
 
     # -- the batched tick ---------------------------------------------------

@@ -247,6 +247,36 @@ class SelectionService:
         self.reprice_refreshes += refreshed
         return refreshed
 
+    # -- fleet management ----------------------------------------------------
+    def retire_selection(self, job_class: Optional[JobClass] = None,
+                         exclude_groups: Sequence[str] = ()) -> bool:
+        """Retire a live (class, exclusion) selection: drop its cached
+        rankings/heads and its live state (batched backend: the member is
+        retired from the shared :class:`BatchedRankState`, so any stale
+        closure still bound to it raises
+        :class:`~repro.selector.NothingRankableError` — a typed
+        rejection, never a raw ``KeyError`` or a masked-slot score).
+
+        Retirement is *serving-state* hygiene, not a ban: a later submit
+        for the same selection rebuilds it cold and serves normally —
+        the journal only records a rejection when the selection is
+        genuinely unrankable.  Returns True when anything was dropped.
+        """
+        base_key = (self.store.version, job_class,
+                    tuple(sorted(exclude_groups)))
+        retired = False
+        for cache in (self._cache, self._head_cache):
+            for key in [k for k in cache if k[2:5] == base_key]:
+                del cache[key]
+                retired = True
+        if self._states.pop(base_key, None) is not None:
+            self._state_tags.pop(base_key, None)
+            retired = True
+        if self._batched is not None and base_key in self._batched:
+            self._batched.retire_state(base_key)
+            retired = True
+        return retired
+
     # -- ranking (cached) ----------------------------------------------------
     def _live_serving(self, base_key: Tuple, tag: Tuple
                       ) -> Optional[Tuple[Callable[[], Sequence[RankedConfig]],

@@ -25,9 +25,9 @@ import pytest
 
 from repro.core.trace import JobClass
 from repro.selector import (BatchedRankState, IdentityCatalog, JaxRankState,
-                            PriceTable, ProfilingStore, RankState,
-                            SelectionService, backend_available, rank_dense,
-                            score_contract)
+                            NothingRankableError, PriceTable, ProfilingStore,
+                            RankState, SelectionService, backend_available,
+                            rank_dense, score_contract)
 from test_backend_parity import assert_within_contract
 
 try:        # the property half needs hypothesis; everything else runs
@@ -175,8 +175,15 @@ def test_states_added_and_retired_mid_stream():
     batched.retire_state("m0")
     del live_members["m0"]
     assert "m0" not in batched
-    with pytest.raises(ValueError, match="unknown member"):
+    # serving a *retired* member is a typed rankable-nothing condition
+    # (ISSUE 6: the service/daemon path journals a genuine rejection) —
+    # a key that was never registered stays a plain ValueError
+    with pytest.raises(NothingRankableError, match="retired"):
         batched.ranking("m0")
+    with pytest.raises(NothingRankableError, match="retired"):
+        batched.top_k("m0", 1)
+    with pytest.raises(ValueError, match="unknown member"):
+        batched.ranking("never-registered")
     tick()
     _assert_fleet_parity(batched, live_members, hours, mask, live, ids)
     # grow well past the starting capacity (2), reusing retired slots

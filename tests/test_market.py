@@ -460,6 +460,51 @@ def test_daemon_journals_rejections_and_keeps_serving():
     assert kinds == ["rejected", "decision"]
 
 
+def test_daemon_feed_error_typed_path_keeps_serving():
+    """Satellite (ISSUE 6): a ``feed.poll`` that raises surfaces as a
+    typed :class:`FeedError` — the daemon journals an additive
+    ``feed-error`` record, keeps prices at the last good epoch, keeps
+    serving, and the *same* tick index is retried by the next Tick."""
+    from repro.market import FeedError, JournalReplayer
+
+    daemon = make_daemon()
+    inner_poll = daemon.ticker.feed.poll
+    polled = []
+    fail = {"remaining": 2}
+
+    def flaky_poll(tick):
+        polled.append(tick)
+        if fail["remaining"] > 0:
+            fail["remaining"] -= 1
+            raise ConnectionError("transient market outage")
+        return inner_poll(tick)
+
+    daemon.ticker.feed.poll = flaky_poll
+    daemon.handle(Submission("decode_32k"))
+    epoch_before = daemon.service.price_epoch
+    assert daemon.handle(Tick()) is None          # fails...
+    assert daemon.handle(Tick()) is None          # ...fails again...
+    assert daemon.handle(Tick()) is None          # ...then lands
+    assert polled == [0, 0, 0]                    # same tick retried
+    assert daemon.stats.feed_errors == 2
+    assert daemon.stats.ticks == 1
+    assert daemon.handle(Submission("decode_32k")) is not None
+    records = [json.loads(ln)
+               for ln in daemon.journal_dump().splitlines()[1:]]
+    errs = [r for r in records if r["kind"] == "feed-error"]
+    assert [e["failures"] for e in errs] == [1, 2]
+    assert all(e["tick"] == 0 and e["price_epoch"] == epoch_before
+               for e in errs)
+    assert "transient market outage" in errs[0]["error"]
+    audit = JournalReplayer(daemon.service.store,
+                            daemon.journal_dump()).audit()
+    assert audit.ok and audit.feed_errors == 2
+    # a FeedError surfaced directly still names its tick
+    with pytest.raises(FeedError) as e:
+        raise FeedError("boom", 7)
+    assert e.value.tick == 7
+
+
 def test_daemon_propagates_misconfiguration():
     """Only NothingRankableError is a routine rejection; a genuine
     misconfiguration (here: an unknown ranking backend) must propagate
