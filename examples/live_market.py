@@ -58,6 +58,11 @@ def main() -> None:
                     help="serve Decisions with only the top-K head of "
                          "the ranking (device-side top_k; the full "
                          "C-config sort never runs)")
+    ap.add_argument("--metrics", nargs="?", const="prom", default=None,
+                    choices=["prom", "json"],
+                    help="dump the run's telemetry registry at exit "
+                         "(DESIGN.md §12) in Prometheus text (default) "
+                         "or JSON")
     args = ap.parse_args()
     if args.serve_top_k is not None and args.serve_top_k < 1:
         ap.error("--serve-top-k must be >= 1")
@@ -110,6 +115,12 @@ def main() -> None:
     journal = daemon.journal_dump().splitlines()
     print(f"\njournal: {len(journal) - 1} records "
           f"(header: {journal[0][:60]}...)")
+
+    if args.metrics:
+        # every component above (service, ticker, daemon) shares the
+        # service's registry, so this is the whole run's telemetry
+        print(f"\n--- metrics ({args.metrics}) ---")
+        print(service.metrics.render(args.metrics), end="")
 
 
 if __name__ == "__main__":

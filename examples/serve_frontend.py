@@ -95,6 +95,24 @@ def main() -> None:
           f"decisions cold-re-ranked at their stamped epochs, "
           f"{len(audit.drift)} within-contract drift records")
 
+    # the run's telemetry, read off the shared registry (DESIGN.md §12);
+    # serve spans are sampled 1-in-span_sample per worker shard
+    reg = fe.metrics_registry
+
+    def us(v):
+        return "      -" if v is None else f"{v * 1e6:7.0f}"
+
+    print(f"\ntelemetry (serve spans sampled 1/{fe.span_sample}):")
+    print("  span            spans   p50 us   p99 us")
+    for name in ("tick.total", "serve.worker"):
+        h = reg.histogram(name)
+        print(f"  {name:<13} {h.count:7d}  {us(h.quantile(0.50))}  "
+              f"{us(h.quantile(0.99))}")
+    offered = stats.submitted + stats.shed
+    print(f"  shed rate: {stats.shed / max(offered, 1):.1%} "
+          f"({stats.shed}/{offered} offered), reprice kernel dispatches: "
+          f"{service.reprice_dispatches}")
+
 
 if __name__ == "__main__":
     main()

@@ -34,7 +34,7 @@ package makes "current" a live property instead of a one-shot argument
                (DESIGN.md §8).
 """
 from repro.market.daemon import (DaemonStats, SelectionDaemon, Submission,
-                                 Tick, synthetic_stream)
+                                 Tick, metrics_record, synthetic_stream)
 from repro.market.feed import (FeedError, MarketEvent, PriceDelta, PriceFeed,
                                SimulatedSpotFeed)
 from repro.market.frontend import (FrontendStats, ServeFrontend, Snapshot,
@@ -51,5 +51,6 @@ __all__ = [
     "PriceTicker", "RecordedPriceFeed", "ReplayAudit", "ReplayMismatch",
     "ReplayedDecision", "SelectionDaemon", "ServeFrontend",
     "SimulatedSpotFeed", "Snapshot", "SnapshotEntry", "Submission", "Tick",
-    "merge_shards", "record_feed", "should_migrate", "synthetic_stream",
+    "merge_shards", "metrics_record", "record_feed", "should_migrate",
+    "synthetic_stream",
 ]

@@ -19,6 +19,7 @@ from typing import (Any, Dict, Hashable, Iterable, Iterator, List, Optional,
                     Sequence, Tuple, Union)
 
 from repro.core.trace import JobClass
+from repro.obs import MetricsRegistry, TICK_SPAN
 from repro.selector import Decision, NothingRankableError, SelectionService
 from repro.market.feed import FeedError, PriceDelta, PriceFeed, hash_uniform
 from repro.market.ticker import PriceTicker
@@ -101,6 +102,25 @@ def feed_error_record(seq: int, tick: int, error: str, failures: int,
             "price_epoch": price_epoch}
 
 
+def metrics_record(seq: int, tick: int, price_epoch: int,
+                   registry: MetricsRegistry) -> Dict[str, Any]:
+    """Additive record kind (DESIGN.md §8/§12): a cumulative telemetry
+    snapshot taken after tick ``tick`` — every counter plus every span
+    histogram (bucket bounds, per-bucket counts, ns-exact sum) from the
+    serving registry, names sorted.  Cumulative-not-delta means a
+    consumer can recover rates between any two records and the *last*
+    record alone carries whole-run percentiles
+    (:meth:`repro.market.JournalReplayer.audit` surfaces ``tick.total``
+    as ``ReplayAudit.tick_latency``).  Gauges are excluded: they are
+    instantaneous reads, not mergeable accounting.  Replay consumers
+    that predate the kind skip it, so audits stay byte-exact."""
+    snap = registry.snapshot()
+    return {"kind": "metrics", "seq": seq, "tick": tick,
+            "price_epoch": price_epoch,
+            "counters": snap["counters"],
+            "histograms": snap["histograms"]}
+
+
 @dataclasses.dataclass(frozen=True)
 class Submission:
     """A job submission event in the daemon stream."""
@@ -133,9 +153,24 @@ class DaemonStats:
 class SelectionDaemon:
     """Consume events, decide, journal.  One instance = one journal."""
 
-    def __init__(self, service: SelectionService, feed: PriceFeed):
+    def __init__(self, service: SelectionService, feed: PriceFeed,
+                 metrics: Optional[MetricsRegistry] = None,
+                 metrics_every: Optional[int] = None):
         self.service = service
-        self.ticker = PriceTicker(feed, service)
+        #: telemetry registry; defaults to the service's so the whole
+        #: tick/serve pipeline exports as one (DESIGN.md §12).
+        self.metrics = metrics if metrics is not None else service.metrics
+        #: journal a cumulative ``"metrics"`` record every N successful
+        #: ticks (``None`` — the default — journals none, keeping
+        #: pre-obs journals byte-identical).
+        if metrics_every is not None and (
+                not isinstance(metrics_every, int)
+                or isinstance(metrics_every, bool) or metrics_every < 1):
+            raise ValueError(f"metrics_every must be a positive int or "
+                             f"None, got {metrics_every!r}")
+        self.metrics_every = metrics_every
+        self.ticker = PriceTicker(feed, service, metrics=self.metrics)
+        self._c_journal = self.metrics.counter("journal.appends")
         self.stats = DaemonStats()
         epoch, prices = service.price_snapshot()
         self._journal: List[str] = [json.dumps({
@@ -154,6 +189,8 @@ class SelectionDaemon:
         """Process one event; returns the Decision for submissions."""
         self.stats.events += 1
         if isinstance(event, Tick):
+            m = self.metrics
+            t0 = m.clock() if m.spans_enabled else None
             try:
                 deltas = self.ticker.tick()
             except FeedError as exc:
@@ -175,12 +212,21 @@ class SelectionDaemon:
             if deltas:
                 self._record(tick_record(self._next_seq(), deltas,
                                          self.service.price_epoch))
+            if t0 is not None:
+                # successful ticks only; a FeedError tick returned above
+                m.histogram(TICK_SPAN).observe(m.clock() - t0)
+            if self.metrics_every is not None and \
+                    self.ticker.tick_count % self.metrics_every == 0:
+                self._record(metrics_record(
+                    self._next_seq(), self.ticker.tick_count,
+                    self.service.price_epoch, m))
             return None
         self.stats.submissions += 1
         try:
-            decision = self.service.submit(
-                event.job_id, annotation=event.annotation,
-                exclude_groups=event.exclude_groups)
+            with self.metrics.span("serve.submit"):
+                decision = self.service.submit(
+                    event.job_id, annotation=event.annotation,
+                    exclude_groups=event.exclude_groups)
         except NothingRankableError:
             # nothing rankable for this submission (empty class, id
             # mismatch, retired member): journal the rejection, keep
@@ -209,6 +255,7 @@ class SelectionDaemon:
 
     def _record(self, rec: Dict[str, Any]) -> None:
         self._journal.append(json.dumps(rec))
+        self._c_journal.inc()
 
     # -- versioned JSONL journal ---------------------------------------------
     def journal_dump(self) -> str:

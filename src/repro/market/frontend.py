@@ -56,7 +56,6 @@ possible: same submissions, same interleave, same merged bytes.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import itertools
 import json
@@ -68,11 +67,13 @@ from typing import (Any, Dict, Hashable, Iterable, List, Mapping, Optional,
                     Sequence, Tuple, Union)
 
 from repro.core.trace import JobClass
+from repro.obs import MetricsRegistry, TICK_SPAN
 from repro.selector import (Decision, NothingRankableError, RankedConfig,
                             SelectionService)
 from repro.market.daemon import (JOURNAL_FORMAT, JOURNAL_VERSION, Submission,
                                  decision_record, feed_error_record,
-                                 rejection_record, tick_record)
+                                 metrics_record, rejection_record,
+                                 tick_record)
 from repro.market.feed import FeedError, PriceFeed
 from repro.market.ticker import PriceTicker
 
@@ -141,30 +142,13 @@ class FrontendStats:
         return self.submitted == self.decisions + self.rejected
 
 
-class _Counters:
-    """Per-thread tallies; each instance is written by exactly one
-    thread (worker w, or the tick thread for index 0), so plain int
-    increments need no synchronization."""
-
-    __slots__ = ("decisions", "rejected", "forwarded", "feed_errors",
-                 "snapshots", "callback_errors")
-
-    def __init__(self) -> None:
-        self.decisions = 0
-        self.rejected = 0
-        self.forwarded = 0
-        self.feed_errors = 0
-        self.snapshots = 0
-        self.callback_errors = 0
-
-
 def merge_shards(header_line: str,
                  shards: Sequence[Sequence[Dict[str, Any]]]) -> str:
     """Merge per-thread journal shards into one v2 journal (text).
 
     Every sharded record is self-describing: decisions/rejections carry
-    ``snapshot_tick`` and ``worker``, tick/feed-error records ``tick``
-    and ``worker``.  The merge sorts by the total order
+    ``snapshot_tick`` and ``worker``, tick/feed-error/metrics records
+    ``tick`` and ``worker``.  The merge sorts by the total order
     ``(tick, worker, position-in-shard)`` — unique per record, so the
     result is deterministic for given shard contents regardless of how
     thread scheduling interleaved the appends — then renumbers ``seq``
@@ -219,7 +203,10 @@ class ServeFrontend:
                  tick_interval: float = 0.0,
                  idle_sleep: float = 0.001,
                  backoff_base: float = 0.01, backoff_cap: float = 1.0,
-                 on_decision: Optional[Any] = None):
+                 on_decision: Optional[Any] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 metrics_every: Optional[int] = None,
+                 span_sample: int = 32):
         if not isinstance(workers, int) or isinstance(workers, bool) \
                 or workers < 1:
             raise ValueError(f"workers must be a positive int, "
@@ -233,8 +220,33 @@ class ServeFrontend:
                 or top_k < 1:
             raise ValueError(f"top_k must be a positive int, "
                              f"got {top_k!r}")
+        if metrics_every is not None and (
+                not isinstance(metrics_every, int)
+                or isinstance(metrics_every, bool) or metrics_every < 1):
+            raise ValueError(f"metrics_every must be a positive int or "
+                             f"None, got {metrics_every!r}")
+        if not isinstance(span_sample, int) or isinstance(span_sample, bool) \
+                or span_sample < 1:
+            raise ValueError(f"span_sample must be a positive int, "
+                             f"got {span_sample!r}")
         self.service = service
-        self.ticker = PriceTicker(feed, service)    # validates the source
+        #: the telemetry registry (DESIGN.md §12); defaults to the
+        #: service's so ticks, repricing and serving export as one.
+        #: :meth:`metrics` renders it; ``metrics_every`` journals it.
+        self.metrics_registry = \
+            metrics if metrics is not None else service.metrics
+        #: journal a cumulative ``"metrics"`` record (shard 0) every N
+        #: successful ticks; ``None`` (default) journals none, keeping
+        #: pre-obs golden journals byte-identical.
+        self.metrics_every = metrics_every
+        #: the worker serve span ("serve.worker") times every
+        #: ``span_sample``-th submission per shard (first included) —
+        #: the sampling that keeps instrumentation under the <3%
+        #: hot-path overhead budget (benchmarks/obs_bench.py); 1 = time
+        #: every serve (golden runs).  All *counters* stay exact.
+        self.span_sample = span_sample
+        self.ticker = PriceTicker(feed, service,
+                                  metrics=self.metrics_registry)
         self.workers = workers
         self.queue_capacity = queue_capacity
         self.top_k = top_k
@@ -261,14 +273,47 @@ class ServeFrontend:
         # lists, one writer each; list.append is atomic under the GIL)
         self._shards: List[List[Dict[str, Any]]] = \
             [[] for _ in range(workers + 1)]
-        self._counters = [_Counters() for _ in range(workers + 1)]
+        # per-shard registry cells (the frontend's old private _Counters,
+        # migrated onto the registry): cell s is written only by the
+        # thread serving shard s — worker s, or the tick thread for 0 —
+        # the same single-writer discipline as the journal shards, so
+        # increments stay plain int adds with no synchronization.
+        reg = self.metrics_registry
+        shard_cells = lambda name: [reg.counter(name).cell(s)
+                                    for s in range(workers + 1)]
+        self._cell_decisions = shard_cells("frontend.decisions")
+        self._cell_rejected = shard_cells("frontend.rejected")
+        self._cell_forwarded = shard_cells("frontend.forwarded")
+        self._cell_cb_errors = shard_cells("frontend.callback_errors")
+        self._cell_journal = shard_cells("journal.appends")
+        self._c_decisions = reg.counter("frontend.decisions")
+        self._c_rejected = reg.counter("frontend.rejected")
+        self._c_forwarded = reg.counter("frontend.forwarded")
+        self._c_cb_errors = reg.counter("frontend.callback_errors")
+        self._c_feed_errors = reg.counter("frontend.feed_errors")
+        self._c_snapshots = reg.counter("frontend.snapshots")
+        # producer-side accounting: counters, not logs — submit() is
+        # called for every submission of a long-running deployment, so
+        # anything that grows per call (the old _accepted_log/_shed_log
+        # deques) is an unbounded-memory bug, pinned by the memory
+        # regression test.  Producer threads each write their own
+        # thread-keyed cell.
+        self._c_submitted = reg.counter("frontend.submitted")
+        self._c_shed = reg.counter("frontend.shed")
+        # per-shard serve-span state: countdown-to-next-sample counters
+        # (0 = sample now) + bound cells.  spans_enabled/clock are
+        # cached as plain attributes — the per-serve cost of sampling
+        # must be a couple of list/attribute ops, not registry lookups
+        # (the <3% budget is measured, not assumed: obs_bench gates it).
+        self._spans_enabled = reg.spans_enabled
+        self._clock = reg.clock
+        self._span_left = [0] * (workers + 1)
+        self._h_serve = [reg.histogram("serve.worker").cell(s)
+                         for s in range(workers + 1)]
+        self._h_fwd_rtt = reg.histogram("serve.forward_rtt")
         self._queues: List["queue.SimpleQueue"] = \
             [queue.SimpleQueue() for _ in range(workers)]
         self._control: "queue.SimpleQueue" = queue.SimpleQueue()
-        # producer-side accounting: deque.append and len() are atomic,
-        # so multiple submit() callers stay lock-free
-        self._accepted_log: "collections.deque" = collections.deque()
-        self._shed_log: "collections.deque" = collections.deque()
         self._rr = itertools.count()
         self._route_memo: Dict[Tuple, Route] = {}
         #: registered selections (tick-thread-owned; insertion-ordered,
@@ -311,11 +356,12 @@ class ServeFrontend:
                         entries=MappingProxyType(entries))
 
     def _publish(self) -> None:
-        snap = self._build_snapshot()
+        with self.metrics_registry.span("snapshot.build"):
+            snap = self._build_snapshot()
         # a single reference store: workers reading self._snapshot see
         # either the old snapshot or the new one, never a mix
         self._snapshot = snap
-        self._counters[0].snapshots += 1
+        self._c_snapshots.inc()
 
     @property
     def snapshot(self) -> Snapshot:
@@ -345,15 +391,15 @@ class ServeFrontend:
         if not isinstance(submission, Submission):
             submission = Submission(submission)
         if self._closed:
-            self._shed_log.append(-1)
+            self._c_shed.inc()
             return False
         w = next(self._rr) % self.workers
         q = self._queues[w]
         if q.qsize() >= self.queue_capacity:
-            self._shed_log.append(w)
+            self._c_shed.inc()
             return False
         q.put(submission)
-        self._accepted_log.append(w)
+        self._c_submitted.inc()
         return True
 
     def retire_selection(self, job_class: Optional[JobClass] = None,
@@ -366,16 +412,27 @@ class ServeFrontend:
         self._control.put(("retire", job_class, tuple(exclude_groups)))
 
     # -- serving (worker w, or inline) ---------------------------------------
-    def _serve_one(self, w: int, sub: Submission) -> None:
-        counters = self._counters[w]
+    def _serve_one(self, w: int, sub: Submission, t0: float = -1.0) -> None:
+        # the lock-free hot path: spans here are hand-rolled (no context
+        # manager allocation) and sampled 1-in-span_sample per shard —
+        # the <3% overhead budget of DESIGN.md §12.  The serve loops own
+        # the sampling countdown (plain local ints; see serve_queued /
+        # _worker_loop) and pass ``t0 >= 0`` only for a sampled serve;
+        # the default means "not timing this one".  Counters are always
+        # exact regardless.
         snap = self._snapshot            # one atomic reference load
         route = self._route(sub)
         entry = snap.entries.get(route)
         if entry is None:
             # selection not published yet (or just retired): the tick
-            # thread owns the service, so the miss path goes to it
-            self._control.put(sub)
-            counters.forwarded += 1
+            # thread owns the service, so the miss path goes to it.
+            # Stamp the forward time so the control thread can observe
+            # the full queue round-trip ("serve.forward_rtt").
+            if self._spans_enabled:
+                self._control.put(("fwd", sub, self._clock()))
+            else:
+                self._control.put(sub)
+            self._cell_forwarded[w].inc()
             return
         if entry.head is None:
             rec = rejection_record(0, sub.job_id, route[0], route[1],
@@ -383,7 +440,10 @@ class ServeFrontend:
             rec["worker"] = w
             rec["snapshot_tick"] = snap.tick
             self._shards[w].append(rec)
-            counters.rejected += 1
+            self._cell_journal[w].inc()
+            self._cell_rejected[w].inc()
+            if t0 >= 0.0:
+                self._h_serve[w].observe(self._clock() - t0)
             return
         decision = Decision(
             job_id=sub.job_id, job_class=route[0],
@@ -395,21 +455,30 @@ class ServeFrontend:
         rec["worker"] = w
         rec["snapshot_tick"] = snap.tick
         self._shards[w].append(rec)
-        counters.decisions += 1
+        self._cell_journal[w].inc()
+        self._cell_decisions[w].inc()
+        if t0 >= 0.0:
+            # serve latency proper: snapshot load -> journaled decision,
+            # excluding the client-reply callback below (whose cost is
+            # the deployment's, not the front-end's)
+            self._h_serve[w].observe(self._clock() - t0)
         if self.on_decision is not None:
             try:
                 self.on_decision(decision)
             except Exception:
-                counters.callback_errors += 1
+                self._cell_cb_errors[w].inc()
 
     def serve_queued(self, worker: Optional[int] = None) -> int:
         """Inline mode: serve everything currently queued for ``worker``
         (1-based; ``None`` = every worker, in worker order) on the
         calling thread.  Returns the number of submissions served."""
         served = 0
+        spans, clock = self._spans_enabled, self._clock
+        stride = self.span_sample
         ws = range(1, self.workers + 1) if worker is None else [worker]
         for w in ws:
             q = self._queues[w - 1]
+            left = self._span_left[w]    # sampling countdown, 0 = now
             while True:
                 try:
                     sub = q.get_nowait()
@@ -417,15 +486,23 @@ class ServeFrontend:
                     break
                 if sub is _SENTINEL:
                     continue
-                self._serve_one(w, sub)
+                if spans:
+                    left -= 1
+                    if left < 0:
+                        left = stride - 1
+                        self._serve_one(w, sub, clock())
+                    else:
+                        self._serve_one(w, sub)
+                else:
+                    self._serve_one(w, sub)
                 served += 1
+            self._span_left[w] = left
         return served
 
     # -- the tick side (tick thread, or inline) ------------------------------
     def _serve_control(self, sub: Submission) -> int:
         """Serve one forwarded submission through the full service path;
         returns 1 when it registered a new selection."""
-        counters = self._counters[0]
         route = self._route(sub)
         fresh = route not in self._selections
         if fresh:
@@ -440,24 +517,27 @@ class ServeFrontend:
             rec["worker"] = 0
             rec["snapshot_tick"] = self._last_tick
             self._shards[0].append(rec)
-            counters.rejected += 1
+            self._cell_journal[0].inc()
+            self._cell_rejected[0].inc()
             return 1 if fresh else 0
         rec = decision_record(0, decision)
         rec["worker"] = 0
         rec["snapshot_tick"] = self._last_tick
         self._shards[0].append(rec)
-        counters.decisions += 1
+        self._cell_journal[0].inc()
+        self._cell_decisions[0].inc()
         if self.on_decision is not None:
             try:
                 self.on_decision(decision)
             except Exception:
-                counters.callback_errors += 1
+                self._cell_cb_errors[0].inc()
         return 1 if fresh else 0
 
     def _drain_control(self) -> int:
         """Process every queued control item; returns the number of
         selection-set changes (registrations + retirements)."""
         changed = 0
+        m = self.metrics_registry
         while True:
             try:
                 item = self._control.get_nowait()
@@ -470,6 +550,15 @@ class ServeFrontend:
                     changed += 1
                 self.service.retire_selection(klass, excl)
                 continue
+            if isinstance(item, tuple) and item and item[0] == "fwd":
+                # a worker miss with its forward timestamp: serve it,
+                # then observe the whole forwarded round-trip (enqueue
+                # -> control drain -> full service path)
+                _, sub, t_fwd = item
+                changed += self._serve_control(sub)
+                if m.spans_enabled:
+                    self._h_fwd_rtt.observe(m.clock() - t_fwd)
+                continue
             changed += self._serve_control(item)
 
     def step_tick(self) -> str:
@@ -481,11 +570,15 @@ class ServeFrontend:
         changed = self._drain_control()
         status = "idle"
         deltas = ()
+        m = self.metrics_registry
+        t0 = -1.0
         if self.ticks is None or self.ticker.tick_count < self.ticks:
+            if m.spans_enabled:
+                t0 = m.clock()
             try:
                 deltas = self.ticker.tick()
             except FeedError as exc:
-                self._counters[0].feed_errors += 1
+                self._c_feed_errors.inc()
                 self._feed_failures += 1
                 rec = feed_error_record(0, exc.tick, str(exc),
                                         self._feed_failures,
@@ -493,6 +586,7 @@ class ServeFrontend:
                 rec["worker"] = 0
                 rec["tick"] = exc.tick
                 self._shards[0].append(rec)
+                self._cell_journal[0].inc()
                 if changed:
                     self._publish()
                 return "feed-error"
@@ -504,8 +598,21 @@ class ServeFrontend:
                 rec["worker"] = 0
                 rec["tick"] = self._last_tick
                 self._shards[0].append(rec)
+                self._cell_journal[0].inc()
         if deltas or changed:
             self._publish()
+        if status == "tick":
+            if t0 >= 0.0:
+                # whole-tick latency, snapshot publication included —
+                # successful ticks only (feed errors returned above)
+                m.histogram(TICK_SPAN).observe(m.clock() - t0)
+            if self.metrics_every is not None and \
+                    self.ticker.tick_count % self.metrics_every == 0:
+                rec = metrics_record(0, self._last_tick,
+                                     self.service.price_epoch, m)
+                rec["worker"] = 0
+                self._shards[0].append(rec)
+                self._cell_journal[0].inc()
         return status
 
     def backoff_delay(self, failures: Optional[int] = None) -> float:
@@ -535,6 +642,9 @@ class ServeFrontend:
 
     def _worker_loop(self, w: int) -> None:
         q = self._queues[w - 1]
+        spans, clock = self._spans_enabled, self._clock
+        stride = self.span_sample
+        left = self._span_left[w]        # sampling countdown, 0 = now
         try:
             while True:
                 try:
@@ -552,6 +662,12 @@ class ServeFrontend:
                         if tail is not _SENTINEL:
                             self._serve_one(w, tail)
                     return
+                if spans:
+                    left -= 1
+                    if left < 0:
+                        left = stride - 1
+                        self._serve_one(w, item, clock())
+                        continue
                 self._serve_one(w, item)
         except BaseException as exc:          # pragma: no cover - guard
             self._thread_errors.append((w, exc))
@@ -614,14 +730,14 @@ class ServeFrontend:
             time.sleep(0.001)
         raise TimeoutError(
             f"front-end failed to drain within {timeout}s: "
-            f"{len(self._accepted_log)} accepted, "
+            f"{self._c_submitted.value} accepted, "
             f"{self._served_total()} served")
 
     def _served_total(self) -> int:
-        return sum(c.decisions + c.rejected for c in self._counters)
+        return self._c_decisions.value + self._c_rejected.value
 
     def _drained(self) -> bool:
-        return self._served_total() >= len(self._accepted_log)
+        return self._served_total() >= self._c_submitted.value
 
     def close(self) -> FrontendStats:
         """Inline-mode shutdown: stop accepting, serve every queued
@@ -675,21 +791,28 @@ class ServeFrontend:
     def __exit__(self, exc_type, exc, tb) -> None:
         self.shutdown()
 
-    # -- stats + journal -----------------------------------------------------
+    # -- stats + metrics + journal -------------------------------------------
     def stats(self) -> FrontendStats:
         return FrontendStats(
-            submitted=len(self._accepted_log),
-            shed=len(self._shed_log),
-            decisions=sum(c.decisions for c in self._counters),
-            rejected=sum(c.rejected for c in self._counters),
-            forwarded=sum(c.forwarded for c in self._counters),
+            submitted=self._c_submitted.value,
+            shed=self._c_shed.value,
+            decisions=self._c_decisions.value,
+            rejected=self._c_rejected.value,
+            forwarded=self._c_forwarded.value,
             ticks=self.ticker.tick_count,
             deltas=self.ticker.deltas_applied,
             epochs=self.ticker.epochs_driven,
-            feed_errors=self._counters[0].feed_errors,
-            snapshots=self._counters[0].snapshots,
-            callback_errors=sum(c.callback_errors
-                                for c in self._counters))
+            feed_errors=self._c_feed_errors.value,
+            snapshots=self._c_snapshots.value,
+            callback_errors=self._c_cb_errors.value)
+
+    def metrics(self, fmt: str = "prom") -> str:
+        """Render the front-end's registry: the merged counters and span
+        histograms of the whole tick/serve pipeline, as Prometheus text
+        (default) or ``fmt="json"`` (DESIGN.md §12).  Safe to call from
+        any thread on a live front-end — merge-on-read never blocks the
+        writers."""
+        return self.metrics_registry.render(fmt)
 
     def shard_records(self, worker: int) -> List[Dict[str, Any]]:
         """One shard's records (journal order = append order).  Shard 0

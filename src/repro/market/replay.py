@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.core.trace import JobClass
 from repro.market.daemon import SelectionDaemon
+from repro.obs import TICK_SPAN, histogram_quantile
 from repro.market.feed import PriceDelta, PriceFeed
 from repro.selector import (NothingRankableError, ProfilingStore,
                             ScoreContract, rank_dense, score_contract)
@@ -312,6 +313,17 @@ class ReplayAudit:
     #: ticks whose poll raised and was retried — prices never moved, so
     #: they are provenance, not a failure condition.
     feed_errors: int = 0
+    #: ``metrics`` records walked past (additive kind, DESIGN.md §8/§12):
+    #: periodic cumulative telemetry exports.  Like feed errors they are
+    #: provenance, not selections — only their stamped price epoch is
+    #: verified against the reconstructed one.
+    metrics_records: int = 0
+    #: tick latency recovered from the journal alone: ``{"p50": s,
+    #: "p99": s, "count": n}`` from the *last* ``metrics`` record's
+    #: cumulative ``tick.total`` histogram (records are cumulative, so
+    #: the last one covers the whole run).  ``None`` when the journal
+    #: carries no metrics records or no tick spans were observed.
+    tick_latency: Optional[Mapping[str, float]] = None
 
     @property
     def ok(self) -> bool:
@@ -447,7 +459,8 @@ class JournalReplayer:
         """
         if contract is None:
             contract = score_contract(self.backend)
-        n_dec = n_tick = n_rej = n_feed = 0
+        n_dec = n_tick = n_rej = n_feed = n_met = 0
+        last_metrics: Optional[Dict[str, Any]] = None
         mismatches: List[ReplayMismatch] = []
         drift: List[ReplayMismatch] = []
         rank_memo: Dict[Tuple, Any] = {}
@@ -489,6 +502,16 @@ class JournalReplayer:
                 if rec["price_epoch"] != epoch:
                     differ(rec["seq"], None, "price_epoch",
                            rec["price_epoch"], epoch)
+                continue
+            if kind == "metrics":
+                # additive kind: cumulative telemetry export — verify
+                # the stamped epoch and keep the last record, whose
+                # cumulative tick.total histogram covers the whole run
+                n_met += 1
+                if rec["price_epoch"] != epoch:
+                    differ(rec["seq"], None, "price_epoch",
+                           rec["price_epoch"], epoch)
+                last_metrics = rec
                 continue
             seq, job = rec.get("seq"), rec.get("job")
             if kind == "rejected":
@@ -534,10 +557,20 @@ class JournalReplayer:
             quote = prices.get(rec["config"])
             if rec["hourly_cost"] != quote:
                 differ(seq, job, "hourly_cost", rec["hourly_cost"], quote)
+        tick_latency = None
+        if last_metrics is not None:
+            h = last_metrics.get("histograms", {}).get(TICK_SPAN)
+            if h and h.get("count"):
+                tick_latency = {
+                    "p50": histogram_quantile(h["le"], h["counts"], 0.50),
+                    "p99": histogram_quantile(h["le"], h["counts"], 0.99),
+                    "count": int(h["count"]),
+                }
         return ReplayAudit(decisions=n_dec, ticks=n_tick, rejected=n_rej,
                            mismatches=tuple(mismatches),
                            drift=tuple(drift), contract=contract,
-                           feed_errors=n_feed)
+                           feed_errors=n_feed, metrics_records=n_met,
+                           tick_latency=tick_latency)
 
     # -- dynamic-price evaluation -------------------------------------------
     def evaluate(self, base_prices: Optional[Mapping[Hashable, float]]

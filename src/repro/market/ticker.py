@@ -10,8 +10,9 @@ hot — so quiet markets cost nothing.
 """
 from __future__ import annotations
 
-from typing import Dict, Hashable, Tuple
+from typing import Dict, Hashable, Optional, Tuple
 
+from repro.obs import MetricsRegistry
 from repro.selector import PriceTable, SelectionService
 from repro.market.feed import FeedError, PriceDelta, PriceFeed
 
@@ -19,13 +20,19 @@ from repro.market.feed import FeedError, PriceDelta, PriceFeed
 class PriceTicker:
     """Applies feed batches to a service's live price table."""
 
-    def __init__(self, feed: PriceFeed, service: SelectionService):
+    def __init__(self, feed: PriceFeed, service: SelectionService,
+                 metrics: Optional[MetricsRegistry] = None):
         if not isinstance(service.price_source, PriceTable):
             raise ValueError(
                 "PriceTicker needs a service with a PriceTable price "
                 "source (use PriceTable.from_catalog to snapshot one)")
         self.feed = feed
         self.service = service
+        #: telemetry: defaults to the service's registry so tick spans
+        #: land next to the reprice/serve counters (DESIGN.md §12).
+        self.metrics = metrics if metrics is not None else service.metrics
+        self._c_ticks = self.metrics.counter("tick.count")
+        self._c_deltas = self.metrics.counter("tick.deltas")
         #: next tick index handed to ``feed.poll``.
         self.tick_count = 0
         self.deltas_applied = 0
@@ -43,16 +50,20 @@ class PriceTicker:
         misconfiguration and propagate untyped.
         """
         try:
-            deltas = self.feed.poll(self.tick_count)
+            with self.metrics.span("tick.poll"):
+                deltas = self.feed.poll(self.tick_count)
         except Exception as exc:
             raise FeedError(
                 f"feed.poll failed at tick {self.tick_count}: "
                 f"{type(exc).__name__}: {exc}", self.tick_count) from exc
         self.tick_count += 1
+        self._c_ticks.inc()
         if deltas:
             table: Dict[Hashable, float] = {d.config_id: d.price
                                             for d in deltas}
-            self.service.reprice(table)
+            with self.metrics.span("tick.reprice"):
+                self.service.reprice(table)
+            self._c_deltas.inc(len(deltas))
             self.deltas_applied += len(deltas)
             self.epochs_driven += 1
         return deltas

@@ -42,6 +42,8 @@ from typing import (Any, Callable, Hashable, List, Mapping, Optional,
 
 import numpy as np
 
+from repro.obs import MetricsRegistry, maybe_span
+
 try:  # accelerator path; the selector core works without jax installed
     import jax
     import jax.numpy as jnp
@@ -369,9 +371,17 @@ class RankState:
 
     def __init__(self, hours: np.ndarray, mask: np.ndarray,
                  prices: np.ndarray, config_ids: Sequence[Hashable],
-                 job_ids: Optional[Sequence[Hashable]] = None):
+                 job_ids: Optional[Sequence[Hashable]] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.config_ids = list(config_ids)
         self.job_ids = list(job_ids) if job_ids is not None else None
+        # optional shared telemetry (DESIGN.md §12): host materializations
+        # tick an aggregate counter + span on the injected registry; the
+        # plain per-state ``materializations`` int stays authoritative for
+        # the freshness tests.
+        self._metrics = metrics
+        self._c_mat = (None if metrics is None
+                       else metrics.counter("rank.materializations"))
         self.hours, self.mask, self.prices = _canonicalize_universe(
             hours, mask, prices, self.job_ids)
         self.prices = self.prices.copy()        # mutated by reprice
@@ -455,9 +465,13 @@ class RankState:
         if self._ranking_memo is None or \
                 self._ranking_memo[0] != self.reprices:
             self.materializations += 1
-            self._ranking_memo = (
-                self.reprices,
-                _materialize(self.scores, self.counts, self.config_ids))
+            if self._c_mat is not None:
+                self._c_mat.inc()
+            with maybe_span(self._metrics, "rank.materialize"):
+                self._ranking_memo = (
+                    self.reprices,
+                    _materialize(self.scores, self.counts,
+                                 self.config_ids))
         return list(self._ranking_memo[1])
 
     def top_k(self, k: int) -> List[RankedConfig]:
@@ -667,13 +681,17 @@ class JaxRankState:
 
     def __init__(self, hours: np.ndarray, mask: np.ndarray,
                  prices: np.ndarray, config_ids: Sequence[Hashable],
-                 job_ids: Optional[Sequence[Hashable]] = None):
+                 job_ids: Optional[Sequence[Hashable]] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if not _HAVE_JAX:
             raise BackendUnavailableError(
                 "JaxRankState requires jax; use RankState (numpy) "
                 "when it is not installed")
         self.config_ids = list(config_ids)
         self.job_ids = list(job_ids) if job_ids is not None else None
+        self._metrics = metrics
+        self._c_mat = (None if metrics is None
+                       else metrics.counter("rank.materializations"))
         hours, mask, prices = _canonicalize_universe(hours, mask, prices,
                                                      self.job_ids)
         self._pos = _position_index(self.config_ids)
@@ -739,9 +757,13 @@ class JaxRankState:
         if self._ranking_memo is None or \
                 self._ranking_memo[0] != self.reprices:
             self.materializations += 1
-            self._ranking_memo = (
-                self.reprices,
-                _materialize(self.scores, self.counts, self.config_ids))
+            if self._c_mat is not None:
+                self._c_mat.inc()
+            with maybe_span(self._metrics, "rank.materialize"):
+                self._ranking_memo = (
+                    self.reprices,
+                    _materialize(self.scores, self.counts,
+                                 self.config_ids))
         return list(self._ranking_memo[1])
 
     def top_k(self, k: int) -> List[RankedConfig]:
@@ -877,13 +899,17 @@ class BatchedRankState:
     def __init__(self, hours: np.ndarray, mask: np.ndarray,
                  prices: np.ndarray, config_ids: Sequence[Hashable],
                  job_ids: Optional[Sequence[Hashable]] = None,
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if not _HAVE_JAX:
             raise BackendUnavailableError(
                 "BatchedRankState requires jax; use RankState (numpy) "
                 "when it is not installed")
         self.config_ids = list(config_ids)
         self.job_ids = list(job_ids) if job_ids is not None else None
+        self._metrics = metrics
+        self._c_mat = (None if metrics is None
+                       else metrics.counter("rank.materializations"))
         hours, mask, prices = _canonicalize_universe(hours, mask, prices,
                                                      self.job_ids)
         self._pos = _position_index(self.config_ids)
@@ -1084,9 +1110,12 @@ class BatchedRankState:
         if memo is None or memo[0] != self.reprices:
             slot = self._slot_of(key)
             self.materializations += 1
-            memo = (self.reprices,
-                    _materialize(self.scores(key), self._counts[slot],
-                                 self.config_ids))
+            if self._c_mat is not None:
+                self._c_mat.inc()
+            with maybe_span(self._metrics, "rank.materialize"):
+                memo = (self.reprices,
+                        _materialize(self.scores(key), self._counts[slot],
+                                     self.config_ids))
             self._ranking_memo[key] = memo
         return list(memo[1])
 

@@ -26,6 +26,7 @@ from typing import (Any, Callable, Dict, Hashable, Mapping, Optional,
                     Sequence, Tuple)
 
 from repro.core.trace import JobClass
+from repro.obs import MetricsRegistry
 from repro.selector.catalog import BaseCatalog, PriceTable
 from repro.selector.rank import (BACKENDS, BackendUnavailableError,
                                  BatchedRankState, JaxRankState,
@@ -68,10 +69,17 @@ class SelectionService:
                  classifier: Optional[Callable[[Hashable],
                                                JobClass]] = None,
                  backend: Optional[str] = None,
-                 serve_top_k: Optional[int] = None):
+                 serve_top_k: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.catalog = catalog
         self.store = store
         self.classifier = classifier
+        #: the service's telemetry registry (DESIGN.md §12).  Every
+        #: counter below lives on it; the market layer (ticker, daemon,
+        #: front-end) adopts it by default so one registry carries the
+        #: whole tick/serve pipeline.  Inject a shared registry to merge
+        #: with store/train/engine telemetry.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         #: ``None`` resolves via :func:`repro.selector.default_backend`
         #: (the ``FLORA_RANK_BACKEND`` env var — CI's backend matrix),
         #: else "numpy".  "numpy" serves the bit-identical float64
@@ -122,14 +130,42 @@ class SelectionService:
         self._batched: Optional[BatchedRankState] = None
         self._batched_tag: Optional[Tuple] = None
         self._batched_store_version: Optional[int] = None
-        self.cache_hits = 0
-        self.cache_misses = 0
-        #: rankings refreshed via the incremental path (not full recomputes).
-        self.reprice_refreshes = 0
-        #: kernel dispatches spent repricing: one per live state per tick
-        #: for the per-state backends, exactly one per tick for
-        #: "jax_batched" regardless of fleet size (the soak/bench gate).
-        self.reprice_dispatches = 0
+        # the scattered ad-hoc counters of PR 1-6 migrated onto the
+        # registry; the attribute names below are pinned by the soak
+        # suite and stay as read-only properties.
+        self._c_hits = self.metrics.counter("service.cache_hits")
+        self._c_misses = self.metrics.counter("service.cache_misses")
+        self._c_refreshes = self.metrics.counter("service.reprice_refreshes")
+        self._c_dispatches = self.metrics.counter(
+            "service.reprice_dispatches")
+
+    @property
+    def cache_hits(self) -> int:
+        return self._c_hits.value
+
+    @cache_hits.setter
+    def cache_hits(self, v: int) -> None:
+        self._c_hits.set(v)
+
+    @property
+    def cache_misses(self) -> int:
+        return self._c_misses.value
+
+    @cache_misses.setter
+    def cache_misses(self, v: int) -> None:
+        self._c_misses.set(v)
+
+    @property
+    def reprice_refreshes(self) -> int:
+        """Rankings refreshed via the incremental path (not recomputes)."""
+        return self._c_refreshes.value
+
+    @property
+    def reprice_dispatches(self) -> int:
+        """Kernel dispatches spent repricing: one per live state per tick
+        for the per-state backends, exactly one per tick for
+        "jax_batched" regardless of fleet size (the soak/bench gate)."""
+        return self._c_dispatches.value
 
     # -- price management ---------------------------------------------------
     @property
@@ -201,7 +237,8 @@ class SelectionService:
         deltas = dict(deltas)
         if not deltas:
             return 0
-        unknown = [c for c in deltas if c not in self.catalog]
+        with self.metrics.span("reprice.validate"):
+            unknown = [c for c in deltas if c not in self.catalog]
         if unknown:
             raise ValueError(
                 f"unknown config ids in price deltas: {unknown[:3]!r}")
@@ -212,39 +249,41 @@ class SelectionService:
         self._head_cache.clear()
         tag = self._price_tag()
         refreshed = 0
-        if self.backend == "jax_batched":
-            # the whole fleet refreshes in ONE kernel dispatch
-            if self._batched is not None and (
-                    self._batched_store_version != self.store.version
-                    or self._batched_tag != prev_tag):
-                # stale trace, or a universe that missed an out-of-band
-                # table.apply before this tick: repricing it would serve
-                # quotes it never saw — drop it, rebuild cold on demand
-                self._batched = None
-                self._batched_tag = None
-                self._batched_store_version = None
-            if self._batched is not None:
-                self._batched.reprice(deltas)
-                self._batched_tag = tag
-                self.reprice_dispatches += 1
-                refreshed = self._batched.n_active
-        else:
-            for key, state in list(self._states.items()):
-                store_version = key[0]
-                if store_version != self.store.version or \
-                        self._state_tags.get(key) != prev_tag:
-                    # stale trace, or a state that missed an out-of-band
+        with self.metrics.span("reprice.dispatch"):
+            if self.backend == "jax_batched":
+                # the whole fleet refreshes in ONE kernel dispatch
+                if self._batched is not None and (
+                        self._batched_store_version != self.store.version
+                        or self._batched_tag != prev_tag):
+                    # stale trace, or a universe that missed an out-of-band
                     # table.apply before this tick: repricing it would
-                    # serve quotes it never saw — drop it, rebuild cold
-                    # on demand
-                    del self._states[key]
-                    self._state_tags.pop(key, None)
-                    continue
-                state.reprice(deltas)
-                self._state_tags[key] = tag
-                self.reprice_dispatches += 1
-                refreshed += 1
-        self.reprice_refreshes += refreshed
+                    # serve quotes it never saw — drop it, rebuild cold on
+                    # demand
+                    self._batched = None
+                    self._batched_tag = None
+                    self._batched_store_version = None
+                if self._batched is not None:
+                    self._batched.reprice(deltas)
+                    self._batched_tag = tag
+                    self._c_dispatches.inc()
+                    refreshed = self._batched.n_active
+            else:
+                for key, state in list(self._states.items()):
+                    store_version = key[0]
+                    if store_version != self.store.version or \
+                            self._state_tags.get(key) != prev_tag:
+                        # stale trace, or a state that missed an
+                        # out-of-band table.apply before this tick:
+                        # repricing it would serve quotes it never saw —
+                        # drop it, rebuild cold on demand
+                        del self._states[key]
+                        self._state_tags.pop(key, None)
+                        continue
+                    state.reprice(deltas)
+                    self._state_tags[key] = tag
+                    self._c_dispatches.inc()
+                    refreshed += 1
+        self._c_refreshes.inc(refreshed)
         return refreshed
 
     # -- fleet management ----------------------------------------------------
@@ -325,7 +364,8 @@ class SelectionService:
                 hours, mask = self.store.matrix(job_ids=all_jobs,
                                                 config_ids=config_ids)
                 b = BatchedRankState(hours, mask, prices, config_ids,
-                                     job_ids=all_jobs)
+                                     job_ids=all_jobs,
+                                     metrics=self.metrics)
                 self._batched = b
                 self._batched_tag = tag
                 self._batched_store_version = self.store.version
@@ -349,7 +389,8 @@ class SelectionService:
                       if k[0] != self.store.version]:
             del self._states[stale]
             self._state_tags.pop(stale, None)
-        state = state_cls(hours, mask, prices, config_ids, job_ids=jobs)
+        state = state_cls(hours, mask, prices, config_ids, job_ids=jobs,
+                          metrics=self.metrics)
         self._states[base_key] = state
         self._state_tags[base_key] = tag
         return state.ranking, state.top_k
@@ -382,19 +423,20 @@ class SelectionService:
         key = tag + base_key
         hit = self._cache.get(key)
         if hit is not None:
-            self.cache_hits += 1
+            self._c_hits.inc()
             return hit, True
         live = self._live_serving(base_key, tag)
         if live is not None:
             # repriced incrementally on the last tick; materialize lazily
             ranking = tuple(live[0]())
             self._cache[key] = ranking
-            self.cache_hits += 1
+            self._c_hits.inc()
             return ranking, True
-        self.cache_misses += 1
+        self._c_misses.inc()
         self._prune_caches(tag)
-        serving = self._build_serving(base_key, tag, job_class,
-                                      exclude_groups)
+        with self.metrics.span("rank.build"):
+            serving = self._build_serving(base_key, tag, job_class,
+                                          exclude_groups)
         ranking = tuple(serving[0]())
         self._cache[key] = ranking
         return ranking, False
@@ -419,23 +461,24 @@ class SelectionService:
         key = tag + base_key
         full = self._cache.get(key)
         if full is not None:
-            self.cache_hits += 1
+            self._c_hits.inc()
             return full[:k], True
         head_key = key + (k,)
         hit = self._head_cache.get(head_key)
         if hit is not None:
-            self.cache_hits += 1
+            self._c_hits.inc()
             return hit, True
         live = self._live_serving(base_key, tag)
         if live is not None:
             head = tuple(live[1](k))
             self._head_cache[head_key] = head
-            self.cache_hits += 1
+            self._c_hits.inc()
             return head, True
-        self.cache_misses += 1
+        self._c_misses.inc()
         self._prune_caches(tag)
-        serving = self._build_serving(base_key, tag, job_class,
-                                      exclude_groups)
+        with self.metrics.span("rank.build"):
+            serving = self._build_serving(base_key, tag, job_class,
+                                          exclude_groups)
         head = tuple(serving[1](k))
         self._head_cache[head_key] = head
         return head, False

@@ -26,6 +26,7 @@ from typing import (Dict, Hashable, Iterable, List, Optional, Sequence,
 import numpy as np
 
 from repro.core.trace import JobClass, Trace
+from repro.obs import MetricsRegistry
 
 JSONL_FORMAT = "repro.selector.profiling-store"
 JSONL_VERSION = 1
@@ -45,7 +46,8 @@ class JobMeta:
 class ProfilingStore:
     """Dense runtime-hours matrix over (job, config) with partial masks."""
 
-    def __init__(self, config_ids: Sequence[Hashable] = ()):
+    def __init__(self, config_ids: Sequence[Hashable] = (),
+                 metrics: Optional[MetricsRegistry] = None):
         self._config_ids: List[Hashable] = []
         self._config_pos: Dict[Hashable, int] = {}
         self._job_ids: List[Hashable] = []
@@ -55,19 +57,26 @@ class ProfilingStore:
         #: mutation counter; consumers (SelectionService) key caches on it
         #: so streamed-in cells invalidate stale rankings.
         self.version = 0
-        #: backing-array reallocations; rows and columns both grow by
-        #: amortized doubling, so this stays O(log rows + log cols) —
-        #: asserted by the growth test in tests/test_market.py.
-        self.realloc_count = 0
+        #: telemetry (DESIGN.md §12); pass a shared registry to export
+        #: store counters alongside service/frontend metrics.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_realloc = self.metrics.counter("store.reallocs")
         for c in config_ids:
             self._add_config(c)
+
+    @property
+    def realloc_count(self) -> int:
+        """Backing-array reallocations; rows and columns both grow by
+        amortized doubling, so this stays O(log rows + log cols) —
+        asserted by the growth test in tests/test_market.py."""
+        return self._c_realloc.value
 
     # -- growth ------------------------------------------------------------
     def _grown(self, rows: int, cols: int) -> np.ndarray:
         new = np.full((max(rows, 1), max(cols, 1)), np.nan)
         r, c = self._hours.shape
         new[:r, :c] = self._hours
-        self.realloc_count += 1
+        self._c_realloc.inc()
         return new
 
     def _add_config(self, config_id: Hashable) -> int:

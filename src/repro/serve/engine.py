@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.types import ModelConfig
+from repro.obs import MetricsRegistry
 from repro.selector import Decision, SelectionService
 
 
@@ -99,7 +100,8 @@ class Engine:
     """Greedy-decoding engine over a fixed slot batch."""
 
     def __init__(self, model, params, *, slots: int, max_len: int,
-                 enc_len: int = 0, placement: Optional[Decision] = None):
+                 enc_len: int = 0, placement: Optional[Decision] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
@@ -108,6 +110,16 @@ class Engine:
         self.enc_len = enc_len
         #: where this fleet is meant to run (selector decision), if planned.
         self.placement = placement
+        #: telemetry (DESIGN.md §12): per-wave ``serve.prefill`` /
+        #: ``serve.decode`` histograms next to the Completion ms fields,
+        #: timed off the registry's injectable clock.
+        self.metrics = metrics
+        self._clock = metrics.clock if metrics is not None \
+            else time.perf_counter
+        self._h_prefill = metrics.histogram("serve.prefill") \
+            if metrics is not None else None
+        self._h_decode = metrics.histogram("serve.decode") \
+            if metrics is not None else None
 
         self._prefill = jax.jit(
             lambda p, b, s: model.prefill(p, b, s))
@@ -127,12 +139,14 @@ class Engine:
         while len(reqs) < self.slots:       # pad with a copy; discarded later
             reqs.append(dataclasses.replace(reqs[-1], uid=-1))
         prompts = jnp.stack([r.prompt for r in reqs])
-        t0 = time.perf_counter()
+        t0 = self._clock()
         state = self._init_state()
         batch = {"tokens": prompts}
         logits, state = self._prefill(self.params, batch, state)
         jax.block_until_ready(logits)
-        t1 = time.perf_counter()
+        t1 = self._clock()
+        if self._h_prefill is not None:
+            self._h_prefill.observe(t1 - t0)
 
         T_p = prompts.shape[1]
         max_new = max(r.max_new_tokens for r in reqs)
@@ -154,7 +168,9 @@ class Engine:
                 break
             logits, state = self._decode(self.params, tok, pos, state)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        t2 = time.perf_counter()
+        t2 = self._clock()
+        if self._h_decode is not None:
+            self._h_decode.observe(t2 - t1)
         return [Completion(uid=r.uid, tokens=out_tokens[i],
                            prefill_ms=(t1 - t0) * 1e3,
                            decode_ms=(t2 - t1) * 1e3)

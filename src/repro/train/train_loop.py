@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs import MetricsRegistry
 from repro.train import optimizer as opt_lib
 
 
@@ -149,28 +150,42 @@ def train_loop(model, tcfg: TrainConfig, params, opt_state, batches, *,
                steps: int, checkpointer=None, checkpoint_every: int = 100,
                watchdog: Optional[StragglerWatchdog] = None,
                log_every: int = 10, start_step: int = 0,
-               train_step=None) -> Tuple[Any, Any, Dict[str, list]]:
+               train_step=None,
+               obs: Optional[MetricsRegistry] = None
+               ) -> Tuple[Any, Any, Dict[str, list]]:
     """Simple host loop: step, log, checkpoint, watch for stragglers.
 
-    ``batches`` is an iterator of ready (sharded) batches.
+    ``batches`` is an iterator of ready (sharded) batches.  With ``obs``
+    wired (a :class:`~repro.obs.MetricsRegistry`), each step's wall time
+    lands in the ``train.step`` histogram and every watchdog flag in the
+    ``train.slow_steps`` counter — the same registry/export format as
+    the serving pipeline (DESIGN.md §12), so one ``render()`` covers the
+    whole job.  Timing uses the registry's injectable clock, so tests
+    can pin step latencies with a fake clock.
     """
     if train_step is None:
         train_step, _ = make_train_step(model, tcfg)
     train_step = jax.jit(train_step, donate_argnums=(0, 1))
     preempt = PreemptionHandler()
     history: Dict[str, list] = {"loss": [], "step_time": []}
+    clock = obs.clock if obs is not None else time.perf_counter
+    h_step = obs.histogram("train.step") if obs is not None else None
+    c_slow = obs.counter("train.slow_steps") if obs is not None else None
 
     step = start_step
     for step in range(start_step, steps):
         batch = next(batches)
-        t0 = time.perf_counter()
+        t0 = clock()
         params, opt_state, metrics = train_step(params, opt_state, batch)
         jax.block_until_ready(metrics["loss"])
-        dt = time.perf_counter() - t0
+        dt = clock() - t0
         history["loss"].append(float(metrics["loss"]))
         history["step_time"].append(dt)
+        if h_step is not None:
+            h_step.observe(dt)
         if watchdog is not None:
-            watchdog.observe(step, dt)
+            if watchdog.observe(step, dt) and c_slow is not None:
+                c_slow.inc()
         if log_every and step % log_every == 0:
             print(f"step {step:6d} loss {float(metrics['loss']):.4f} "
                   f"grad_norm {float(metrics['grad_norm']):.3f} "

@@ -193,7 +193,8 @@ def test_merged_journal_parses_as_v2():
         assert "worker" in r
         assert ("snapshot_tick" in r) == (r["kind"] in ("decision",
                                                         "rejected"))
-        assert ("tick" in r) == (r["kind"] in ("tick", "feed-error"))
+        assert ("tick" in r) == (r["kind"] in ("tick", "feed-error",
+                                               "metrics"))
 
 
 # --- merge_shards: the total order -----------------------------------------------
