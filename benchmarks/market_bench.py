@@ -23,6 +23,13 @@ nonzero if a gated claim regresses, which is the CI gate):
     by >=3x at 64x10k (``topk_serve_*`` rows: the ``end_to_end_speedup``
     gate — one dispatch plus an O(k) readback versus per-state dispatches
     plus a full C-config host sort);
+  * the device-sharded fleet (``jax_sharded``, DESIGN.md §13) spends one
+    *collective* shard_map dispatch per tick and, on 8 devices at 100k
+    configs, beats the single-device batched fleet
+    (``reprice_sharded_*`` rows: ``one_dispatch_per_tick`` +
+    ``within_contract`` + ``beats_single_device`` gates; the 8-device
+    row needs ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on
+    a CPU host and emits ``skipped=...`` elsewhere);
   * ``SelectionDaemon`` sustains a 10k-event mixed submission/tick stream
     deterministically — the same seed yields a byte-identical journal.
 
@@ -312,6 +319,107 @@ def bench_reprice_batched(n_jobs: int, n_cfgs: int, frac: float,
     gate(name, "within_contract", within)
 
 
+def bench_reprice_sharded(n_jobs: int, n_cfgs: int, frac: float,
+                          n_states: int = 8, n_ticks: int = 10,
+                          n_devices: "int | None" = None,
+                          gate_speedup: bool = False) -> None:
+    """ISSUE 8 acceptance: the device-sharded fleet (the C axis split
+    over a 1-D mesh, DESIGN.md §13) spends one *collective* shard_map
+    dispatch per tick for the whole fleet and, on 8 devices at >=100k
+    configs, beats the single-device batched fleet per tick — within
+    the jax_sharded ``ScoreContract`` of per-state float64 references.
+    Gated: ``one_dispatch_per_tick`` + ``within_contract`` (+
+    ``beats_single_device`` when ``gate_speedup``); rows needing more
+    devices than the host exposes emit ``skipped=...`` instead of
+    gating, so the claim is enforced only on the CI leg that forces an
+    8-device host platform."""
+    if not backend_available("jax_sharded"):
+        emit(f"reprice_sharded_{n_devices or 1}x{n_cfgs}", 0.0,
+             "skipped=jax_unavailable")
+        return
+    import jax
+
+    from repro.selector import ShardedBatchedRankState
+    avail = jax.device_count()
+    n_dev = avail if n_devices is None else n_devices
+    name = f"reprice_sharded_{n_dev}x{n_cfgs}"
+    if n_dev > avail:
+        emit(name, 0.0, f"skipped=needs_{n_dev}_devices_have_{avail}")
+        return
+    hours, mask, prices, ids, rng = _universe(n_jobs, n_cfgs)
+    batches = _delta_batches(ids, prices, rng, n_ticks, frac)
+    members = _fleet_members(n_jobs, n_states, rng)
+    contract = score_contract("jax_sharded")
+
+    # contract sweep (untimed): every member vs its float64 incremental
+    # reference; the 100k row trims the sweep to 3 ticks so the smoke
+    # budget pays for the timed comparison, not the float64 re-ranks
+    sweep = batches if n_cfgs < 100_000 else batches[:3]
+    sharded = ShardedBatchedRankState(hours, mask, prices, ids,
+                                      devices=n_dev)
+    for key, rows in members.items():
+        sharded.add_state(key, rows=rows)
+    refs = {key: RankState(hours[rows], mask[rows], prices.copy(), ids)
+            for key, rows in members.items()}
+    within = True
+    for batch in sweep:
+        sharded.reprice(batch)
+        for ref in refs.values():
+            ref.reprice(batch)
+        if not _within_contract_vs_refs(sharded, refs, members, contract):
+            within = False
+            break
+
+    # timed: one collective sharded dispatch per tick vs the
+    # single-device batched fleet (warm both jit caches first so
+    # compile time is billed to neither side)
+    sharded = ShardedBatchedRankState(hours, mask, prices, ids,
+                                      devices=n_dev)
+    for key, rows in members.items():
+        sharded.add_state(key, rows=rows)
+    sharded.reprice(batches[0])
+    batched = BatchedRankState(hours, mask, prices, ids)
+    for key, rows in members.items():
+        batched.add_state(key, rows=rows)
+    batched.reprice(batches[0])
+
+    sharded = ShardedBatchedRankState(hours, mask, prices, ids,
+                                      devices=n_dev)
+    for key, rows in members.items():
+        sharded.add_state(key, rows=rows)
+    t0 = time.perf_counter()
+    for batch in batches:
+        sharded.reprice(batch)
+    us_sharded = (time.perf_counter() - t0) / n_ticks * 1e6
+    one_dispatch = sharded.dispatches == n_ticks and \
+        sharded.n_active == n_states
+    batched = BatchedRankState(hours, mask, prices, ids)
+    for key, rows in members.items():
+        batched.add_state(key, rows=rows)
+    t0 = time.perf_counter()
+    for batch in batches:
+        batched.reprice(batch)
+    us_single = (time.perf_counter() - t0) / n_ticks * 1e6
+
+    speedup = us_single / us_sharded
+    emit(name, us_sharded,
+         f"cells={n_jobs * n_cfgs};states={n_states};devices={n_dev};"
+         f"dispatches_per_tick={sharded.dispatches / n_ticks:.2f};"
+         f"one_dispatch_per_tick={one_dispatch};"
+         f"single_device_us={us_single:.1f};"
+         f"speedup_vs_single_device={speedup:.2f}x;"
+         f"beats_single_device={us_single > us_sharded};"
+         f"within_contract={within};"
+         f"contract=rel{contract.rel_tol:g}/abs{contract.abs_tol:g}")
+    gate(name, "one collective dispatch per tick for the whole fleet",
+         one_dispatch)
+    gate(name, "within_contract", within)
+    if gate_speedup:
+        gate(name, f"{n_dev}-device sharded beats single-device batched "
+                   f"at {n_cfgs} configs (got {speedup:.2f}x)",
+             us_single > us_sharded)
+
+
 def bench_topk_serve(n_jobs: int, n_cfgs: int, frac: float,
                      n_states: int = 8, k: int = 3,
                      n_ticks: int = 10) -> None:
@@ -420,14 +528,21 @@ def main(smoke: bool = False) -> None:
     bench_reprice(64, 1_000, 0.01)
     bench_reprice(64, 10_000, 0.01)
     bench_reprice_jax(64, 10_000, 0.01)
-    # the ISSUE 5 acceptance rows run in smoke mode too: CI gates them
+    # the ISSUE 5/8 acceptance rows run in smoke mode too: CI gates them
     bench_reprice_batched(64, 10_000, 0.01)
     bench_topk_serve(64, 10_000, 0.01)
+    # always-run small sharded row over whatever devices the host has,
+    # plus the gated ISSUE 8 row (8 devices x 100k configs; emits a
+    # skipped row — no gate — on hosts without 8 devices)
+    bench_reprice_sharded(64, 10_000, 0.01)
+    bench_reprice_sharded(64, 100_000, 0.01, n_devices=8,
+                          gate_speedup=True)
     if not smoke:
         bench_reprice(64, 10_000, 0.001)
         bench_reprice(256, 10_000, 0.01)
         bench_reprice_jax(64, 10_000, 0.001)
         bench_reprice_batched(64, 10_000, 0.001, n_states=16)
+        bench_reprice_sharded(64, 10_000, 0.001, n_states=16)
     bench_daemon(2_000 if smoke else 10_000)
     write_json()
     if GATE_FAILURES:

@@ -30,9 +30,10 @@ JOURNAL_FORMAT = "repro.market.decision-journal"
 #: carry the applied deltas, decision records carry the winner's score
 #: and the effective exclusion set.  Within v2, the header also stamps
 #: the service's ranking ``backend`` — replays pick their audit mode
-#: from it (numpy: bit-identical; jax/jax_batched: the tolerance
-#: contract, DESIGN.md §9-§10); journals written before the stamp read
-#: as numpy.  Decision records served via device-side top-k carry an
+#: from it (numpy: bit-identical; jax/jax_batched/jax_sharded: the
+#: tolerance contract, DESIGN.md §9-§10, §13); journals written before
+#: the stamp read as numpy.  New backend names are additive: the stamp
+#: is data, and consumers resolve it through ``score_contract``.  Decision records served via device-side top-k carry an
 #: additive ``served_via`` field (absent = full-ranking serving); a
 #: feed that raises mid-tick journals an additive ``feed-error`` record
 #: kind (the tick is retried; prices stay at the last good epoch); and

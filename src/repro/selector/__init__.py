@@ -31,21 +31,24 @@ from repro.selector.catalog import (BaseCatalog, GcpVmCatalog,
                                     IdentityCatalog, PriceTable,
                                     ResourceCatalog, TpuSliceCatalog)
 from repro.selector.rank import (BACKEND_ENV_VAR, BACKENDS,
+                                 FLEET_BACKENDS,
                                  BackendUnavailableError, BatchedRankState,
                                  JaxRankState, NothingRankableError,
                                  RankedConfig, RankState, SCORE_CONTRACTS,
                                  ScoreContract, backend_available,
                                  default_backend, rank_dense, rank_pairs,
                                  score_contract)
+from repro.selector.sharded import ShardedBatchedRankState
 from repro.selector.store import ProfilingStore
 from repro.selector.service import Decision, SelectionService
 
 __all__ = [
     "BACKEND_ENV_VAR", "BACKENDS", "BackendUnavailableError", "BaseCatalog",
-    "BatchedRankState", "Decision", "GcpVmCatalog", "IdentityCatalog",
-    "JaxRankState",
+    "BatchedRankState", "Decision", "FLEET_BACKENDS", "GcpVmCatalog",
+    "IdentityCatalog", "JaxRankState",
     "NothingRankableError", "PriceTable", "ProfilingStore", "RankState",
     "RankedConfig", "ResourceCatalog", "SCORE_CONTRACTS", "ScoreContract",
-    "SelectionService", "TpuSliceCatalog", "backend_available",
+    "SelectionService", "ShardedBatchedRankState", "TpuSliceCatalog",
+    "backend_available",
     "default_backend", "rank_dense", "rank_pairs", "score_contract",
 ]

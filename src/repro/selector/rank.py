@@ -28,10 +28,14 @@ accelerator-resident jitted delta-update kernel with donated buffers).
 :class:`BatchedRankState` stacks a whole fleet of (class, exclusion)
 rankings over one shared device-resident hours matrix, so a price tick
 is a *single* dispatch for every live ranking (DESIGN.md §10); the
-``"jax_batched"`` backend name selects it at the service level.  Every
-state also serves :meth:`top_k` — the head of the ranking without
-materializing and sorting all C configs (``jax.lax.top_k`` on device
-for the jax-family states, a partial selection on numpy).
+``"jax_batched"`` backend name selects it at the service level.
+``"jax_sharded"`` (:mod:`repro.selector.sharded`) shards that batched
+universe's config axis across every local device, so one *collective*
+dispatch per tick reprices the fleet at catalogs no single device holds
+(DESIGN.md §13).  Every state also serves :meth:`top_k` — the head of
+the ranking without materializing and sorting all C configs
+(``jax.lax.top_k`` on device for the jax-family states, a partial
+selection on numpy).
 """
 from __future__ import annotations
 
@@ -56,7 +60,18 @@ BACKEND_ENV_VAR = "FLORA_RANK_BACKEND"
 #: ``"jax_batched"`` shares the jax cold kernel and ScoreContract but
 #: makes the *service* stack every live (class, exclusion) ranking into
 #: one :class:`BatchedRankState` — one dispatch per tick for the fleet.
-BACKENDS = ("numpy", "jax", "jax_batched")
+#: ``"jax_sharded"`` additionally shards the config axis of that fleet
+#: universe across every local device
+#: (:class:`~repro.selector.sharded.ShardedBatchedRankState`) — one
+#: *collective* dispatch per tick for catalogs too large for one
+#: device (DESIGN.md §13).
+BACKENDS = ("numpy", "jax", "jax_batched", "jax_sharded")
+#: the fleet backends: a SelectionService on one of these stacks every
+#: live (class, exclusion) ranking into a single shared state, so a
+#: price tick is one (possibly collective) kernel dispatch fleet-wide.
+FLEET_BACKENDS = ("jax_batched", "jax_sharded")
+#: backends whose runtime dependency is jax.
+_JAX_FAMILY = ("jax", "jax_batched", "jax_sharded")
 
 
 class BackendUnavailableError(RuntimeError):
@@ -147,15 +162,23 @@ SCORE_CONTRACTS: Mapping[str, ScoreContract] = {
     # kernel, so the envelope is identical (DESIGN.md §10).
     "jax_batched": ScoreContract("jax_batched", bit_identical=False,
                                  rel_tol=1e-4, abs_tol=1e-6),
+    # sharding the C axis changes *where* each column's arithmetic runs,
+    # not the arithmetic: per-shard row minima combine through
+    # `lax.pmin` (exact on floats), and every norm/score term is the
+    # same float32 expression as "jax_batched", so the envelope is
+    # again identical (DESIGN.md §13).
+    "jax_sharded": ScoreContract("jax_sharded", bit_identical=False,
+                                 rel_tol=1e-4, abs_tol=1e-6),
 }
 
 
 def backend_available(backend: str) -> bool:
     """Can ``backend`` actually run here?  ``"numpy"`` always; the
-    jax-family backends (``"jax"``, ``"jax_batched"``) only when jax
-    imports.  Unknown names are *not* an error from this predicate
-    (they fail later with ``ValueError`` at dispatch)."""
-    return backend not in ("jax", "jax_batched") or _HAVE_JAX
+    jax-family backends (``"jax"``, ``"jax_batched"``,
+    ``"jax_sharded"``) only when jax imports.  Unknown names are *not*
+    an error from this predicate (they fail later with ``ValueError``
+    at dispatch)."""
+    return backend not in _JAX_FAMILY or _HAVE_JAX
 
 
 def score_contract(backend: str) -> ScoreContract:
@@ -295,9 +318,10 @@ def rank_dense(hours: np.ndarray, mask: np.ndarray, prices: np.ndarray,
     """
     hours, mask, prices = _canonicalize_universe(hours, mask, prices,
                                                  job_ids)
-    if backend in ("jax", "jax_batched"):
-        # batching is a *serving* distinction (how live states share a
-        # tick dispatch); a cold full rank is the same fused kernel
+    if backend in _JAX_FAMILY:
+        # batching/sharding is a *serving* distinction (how live states
+        # share a tick dispatch); a cold full rank is the same fused
+        # kernel
         if not _HAVE_JAX:
             raise BackendUnavailableError(
                 f"backend={backend!r} requested but jax is not installed "
@@ -501,18 +525,16 @@ class RankState:
 
 # --- the accelerator-resident incremental path (jax backend) ----------------------
 
-def _validated_delta_cols(pos: Mapping[Hashable, int],
-                          deltas: Union[Mapping[Hashable, float],
-                                        Sequence[Tuple[Hashable, float]]],
-                          bucket_base: int
-                          ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
-    """Shared delta-batch preparation for the jitted jax states
-    (:class:`JaxRankState`, :class:`BatchedRankState`): validate ids and
-    prices, then pad ``(cols, new_prices)`` to the next power-of-4
-    column-count bucket so the jitted step compiles O(log C) shape
-    variants.  Padding repeats the first (column, price) pair, which
-    every kernel op treats idempotently.  Returns ``None`` for an empty
-    batch."""
+def _validated_deltas(pos: Mapping[Hashable, int],
+                      deltas: Union[Mapping[Hashable, float],
+                                    Sequence[Tuple[Hashable, float]]]
+                      ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Validate a delta batch for the jitted jax states: resolve config
+    ids to column positions and reject non-positive / non-finite prices.
+    Returns unpadded ``(cols, new_prices)`` or ``None`` for an empty
+    batch.  (Bucket padding is the caller's concern — the single-device
+    states pad the whole batch, the sharded state routes columns to
+    their owning shard first and pads per shard.)"""
     table = deltas if isinstance(deltas, Mapping) else dict(deltas)
     if not table:
         return None
@@ -526,10 +548,36 @@ def _validated_delta_cols(pos: Mapping[Hashable, int],
         offender = list(table)[int(np.flatnonzero(bad)[0])]
         raise ValueError(f"non-positive or non-finite price for "
                          f"config {offender!r}")
-    k = cols.shape[0]
+    return cols, new_prices
+
+
+def _bucket_size(n: int, bucket_base: int) -> int:
+    """Next power-of-4 bucket >= ``n`` (starting at ``bucket_base``), so
+    the jitted steps compile O(log C) shape variants."""
     bucket = bucket_base
-    while bucket < k:
+    while bucket < n:
         bucket *= 4
+    return bucket
+
+
+def _validated_delta_cols(pos: Mapping[Hashable, int],
+                          deltas: Union[Mapping[Hashable, float],
+                                        Sequence[Tuple[Hashable, float]]],
+                          bucket_base: int
+                          ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Shared delta-batch preparation for the jitted jax states
+    (:class:`JaxRankState`, :class:`BatchedRankState`): validate ids and
+    prices (:func:`_validated_deltas`), then pad ``(cols, new_prices)``
+    to the next power-of-4 column-count bucket so the jitted step
+    compiles O(log C) shape variants.  Padding repeats the first
+    (column, price) pair, which every kernel op treats idempotently.
+    Returns ``None`` for an empty batch."""
+    validated = _validated_deltas(pos, deltas)
+    if validated is None:
+        return None
+    cols, new_prices = validated
+    k = cols.shape[0]
+    bucket = _bucket_size(k, bucket_base)
     if bucket > k:
         cols = np.concatenate(
             [cols, np.full(bucket - k, cols[0], dtype=np.int32)])
@@ -949,6 +997,11 @@ class BatchedRankState:
         self.reprices = 0
         #: alias making the dispatch accounting explicit at call sites.
         self.dispatches = 0
+        #: capacity doublings since construction.  A retire-all /
+        #: re-add cycle must reuse the zero-masked slots and leave this
+        #: untouched (regression-pinned) — growth is for genuinely new
+        #: concurrent members only.
+        self.realloc_count = 0
         self.materializations = 0
         self._ranking_memo: "dict[Hashable, Tuple[int, List[RankedConfig]]]" = {}
 
@@ -993,6 +1046,7 @@ class BatchedRankState:
         self._counts = counts
         self._free.extend(range(cap - 1, self._capacity - 1, -1))
         self._capacity = cap
+        self.realloc_count += 1
 
     def _rows_of(self, rows: Optional[Sequence[int]],
                  jobs: Optional[Sequence[Hashable]]) -> np.ndarray:

@@ -28,11 +28,13 @@ from typing import (Any, Callable, Dict, Hashable, Mapping, Optional,
 from repro.core.trace import JobClass
 from repro.obs import MetricsRegistry
 from repro.selector.catalog import BaseCatalog, PriceTable
-from repro.selector.rank import (BACKENDS, BackendUnavailableError,
+from repro.selector.rank import (BACKENDS, FLEET_BACKENDS,
+                                 BackendUnavailableError,
                                  BatchedRankState, JaxRankState,
                                  NothingRankableError, RankedConfig,
                                  RankState, backend_available,
                                  default_backend)
+from repro.selector.sharded import ShardedBatchedRankState
 from repro.selector.store import ProfilingStore
 
 
@@ -87,7 +89,10 @@ class SelectionService:
         #: contract (DESIGN.md §9); "jax_batched" the same contract with
         #: every live (class, exclusion) ranking stacked into one
         #: :class:`BatchedRankState` — a tick is one kernel dispatch for
-        #: the whole fleet (DESIGN.md §10).
+        #: the whole fleet (DESIGN.md §10); "jax_sharded" the batched
+        #: fleet with its config axis sharded across every local device
+        #: (:class:`ShardedBatchedRankState`) — a tick is one
+        #: *collective* dispatch (DESIGN.md §13).
         self.backend = backend if backend is not None else default_backend()
         # fail at construction, not first submit: a service that can
         # never rank is misconfiguration the caller should see now
@@ -118,15 +123,16 @@ class SelectionService:
         self._head_cache: Dict[Tuple, Tuple[RankedConfig, ...]] = {}
         #: live incremental states, keyed like the cache but without the
         #: price tag — a reprice mutates them in place across epochs.
-        #: Unused by the "jax_batched" backend, whose fleet lives inside
-        #: the one shared :attr:`_batched` state instead.
+        #: Unused by the fleet backends ("jax_batched"/"jax_sharded"),
+        #: whose fleet lives inside the one shared :attr:`_batched`
+        #: state instead.
         self._states: Dict[Tuple, RankState] = {}
         #: price tag each state was last (re)priced under; a state is only
         #: served when its tag matches the current one.
         self._state_tags: Dict[Tuple, Tuple] = {}
-        # the "jax_batched" fleet: one BatchedRankState over the full
-        # store, members keyed by base_key, plus the tag/store version
-        # it is in sync with
+        # the fleet backends' universe: one BatchedRankState (or its
+        # sharded counterpart) over the full store, members keyed by
+        # base_key, plus the tag/store version it is in sync with
         self._batched: Optional[BatchedRankState] = None
         self._batched_tag: Optional[Tuple] = None
         self._batched_store_version: Optional[int] = None
@@ -163,8 +169,9 @@ class SelectionService:
     @property
     def reprice_dispatches(self) -> int:
         """Kernel dispatches spent repricing: one per live state per tick
-        for the per-state backends, exactly one per tick for
-        "jax_batched" regardless of fleet size (the soak/bench gate)."""
+        for the per-state backends, exactly one per tick for the fleet
+        backends ("jax_batched"/"jax_sharded") regardless of fleet size
+        (the soak/bench gate)."""
         return self._c_dispatches.value
 
     # -- price management ---------------------------------------------------
@@ -250,8 +257,9 @@ class SelectionService:
         tag = self._price_tag()
         refreshed = 0
         with self.metrics.span("reprice.dispatch"):
-            if self.backend == "jax_batched":
-                # the whole fleet refreshes in ONE kernel dispatch
+            if self.backend in FLEET_BACKENDS:
+                # the whole fleet refreshes in ONE (possibly
+                # collective) kernel dispatch
                 if self._batched is not None and (
                         self._batched_store_version != self.store.version
                         or self._batched_tag != prev_tag):
@@ -325,7 +333,7 @@ class SelectionService:
         ``base_key`` (repriced incrementally on the last tick — serving
         from it is a cache hit, no ranking recompute happened), or
         ``None`` when the selection must be built cold."""
-        if self.backend == "jax_batched":
+        if self.backend in FLEET_BACKENDS:
             b = self._batched
             if b is not None and self._batched_tag == tag and \
                     self._batched_store_version == self.store.version \
@@ -345,17 +353,19 @@ class SelectionService:
                                   Callable[[int], Sequence[RankedConfig]]]:
         """Cold-build the live state serving ``base_key`` and return its
         ``(ranking_fn, top_k_fn)``.  Per-state backends build one
-        RankState/JaxRankState over the selection's rows; "jax_batched"
-        registers the selection as a member of the one shared
-        :class:`BatchedRankState` over the full store (building that
-        universe first if the trace or price tag moved on)."""
+        RankState/JaxRankState over the selection's rows; the fleet
+        backends register the selection as a member of the one shared
+        :class:`BatchedRankState` (or, for "jax_sharded", the
+        multi-device :class:`ShardedBatchedRankState`) over the full
+        store (building that universe first if the trace or price tag
+        moved on)."""
         jobs = self.store.select_jobs(job_class=job_class,
                                       exclude_groups=exclude_groups)
         if not jobs:
             raise NothingRankableError("no test jobs to learn from")
         config_ids = self.catalog.ids()
         prices = self.catalog.price_vector(self._price_source)
-        if self.backend == "jax_batched":
+        if self.backend in FLEET_BACKENDS:
             b = self._batched
             if b is None or \
                     self._batched_store_version != self.store.version \
@@ -363,9 +373,12 @@ class SelectionService:
                 all_jobs = self.store.job_ids
                 hours, mask = self.store.matrix(job_ids=all_jobs,
                                                 config_ids=config_ids)
-                b = BatchedRankState(hours, mask, prices, config_ids,
-                                     job_ids=all_jobs,
-                                     metrics=self.metrics)
+                fleet_cls = (BatchedRankState
+                             if self.backend == "jax_batched"
+                             else ShardedBatchedRankState)
+                b = fleet_cls(hours, mask, prices, config_ids,
+                              job_ids=all_jobs,
+                              metrics=self.metrics)
                 self._batched = b
                 self._batched_tag = tag
                 self._batched_store_version = self.store.version

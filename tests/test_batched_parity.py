@@ -197,6 +197,44 @@ def test_states_added_and_retired_mid_stream():
 
 
 @needs_jax
+def test_batched_retire_all_then_readd_reuses_slots():
+    """ISSUE 8 satellite: a fleet whose members are all retired and
+    then re-added must reuse the zero-masked slots, not double capacity
+    — ``realloc_count`` is pinned across the cycle, and the revived
+    member's scores bit-match a cold build at the same prices."""
+    rng, hours, mask, prices, ids, members = _fleet_universe(
+        13, n_jobs=10, n_cfgs=14, n_members=4)
+    b = BatchedRankState(hours, mask, prices.copy(), ids, capacity=4)
+    for key, rows in members.items():
+        b.add_state(key, rows=rows)
+    live = prices.copy()
+    deltas = {ids[2]: 0.4, ids[9]: 11.0}
+    b.reprice(deltas)
+    for c, p in deltas.items():
+        live[int(c[1:])] = p
+    assert b.realloc_count == 0
+    for key in list(members):
+        b.retire_state(key)
+    assert b.n_active == 0
+    for key, rows in members.items():
+        b.add_state(key, rows=rows)
+    # the whole cycle reused the freed slots: no capacity doubling
+    assert b.realloc_count == 0
+    assert b.n_active == len(members)
+    # the revived members bit-match a cold build at the live prices
+    cold = BatchedRankState(hours, mask, live.copy(), ids)
+    for key, rows in members.items():
+        cold.add_state(key, rows=rows)
+        assert np.array_equal(b.scores(key), cold.scores(key)), key
+        assert b.ranking(key) == cold.ranking(key)
+    # growth still happens (and is counted) for genuinely new members:
+    # 4 live + 4 new overflows the 4-slot pool exactly once (4 -> 8)
+    for i in range(4):
+        b.add_state(f"extra{i}", rows=[0, 1])
+    assert b.realloc_count == 1
+
+
+@needs_jax
 def test_batched_validates_members_and_deltas():
     rng, hours, mask, prices, ids, _ = _fleet_universe(3, n_jobs=4,
                                                        n_cfgs=6)

@@ -229,6 +229,56 @@ def test_merge_shards_total_order_and_seq():
     assert tick0["seq"] == 0
 
 
+def test_merge_shards_tolerates_degenerate_shards():
+    """Satellite (ISSUE 8): a worker that journaled zero records hands
+    the merge an empty shard — the total order and contiguous seq
+    renumbering must survive any number of empty shards in any
+    position, and the all-empty merge is the header-only journal."""
+    import json
+    header = '{"format": "test-header"}'
+    tick0 = {"kind": "tick", "seq": 0, "worker": 0, "tick": 0}
+    d_w2_t0 = {"kind": "decision", "seq": 0, "worker": 2,
+               "snapshot_tick": 0, "job": "a"}
+    busy = [[tick0], [d_w2_t0]]
+    merged = merge_shards(header, busy)
+    # empty shards are inert: same bytes wherever they appear
+    assert merge_shards(header, [[], *busy]) == merged
+    assert merge_shards(header, [[tick0], [], [d_w2_t0], []]) == merged
+    recs = [json.loads(ln) for ln in merged.splitlines()[1:]]
+    assert [r["seq"] for r in recs] == [1, 2]
+    # every shard empty (a frontend that served nothing): header only
+    assert merge_shards(header, [[], [], []]) == header + "\n"
+    assert merge_shards(header, []) == header + "\n"
+
+
+def test_zero_record_worker_shard_still_audits_clean():
+    """Satellite (ISSUE 8), end-to-end: with no warm-up every queued
+    submission misses the snapshot and forwards to the control path, so
+    *both* worker shards journal zero records; a second wave sheds 100%
+    against the capacity-1 queues.  The merged journal must still be
+    total-ordered with contiguous seq and pass the unmodified
+    ``JournalReplayer.audit``."""
+    fe, store = _frontend(workers=2, queue_capacity=1, n_ticks=4)
+    assert fe.step_tick() == "tick"              # tick 0 lands
+    assert fe.submit(Submission("j1"))           # -> worker 1
+    assert fe.submit(Submission("j2"))           # -> worker 2
+    assert fe.submit(Submission("j1")) is False  # w1 at capacity: shed
+    assert fe.submit(Submission("j2")) is False  # w2 at capacity: shed
+    fe.serve_queued()                # both miss the snapshot -> forward
+    fe.step_tick()                   # control path serves both
+    stats = fe.close()
+    assert stats.forwarded == 2 and stats.decisions == 2
+    assert stats.shed == 2 and stats.accounted
+    _, records = SelectionDaemon.loads_journal(fe.journal_dump())
+    served = [r for r in records if r["kind"] in ("decision", "rejected")]
+    assert len(served) == 2
+    assert all(r["worker"] == 0 for r in records)   # worker shards empty
+    assert [r["seq"] for r in records] == list(range(1, len(records) + 1))
+    audit = JournalReplayer(store, fe.journal_dump()).audit()
+    assert audit.ok, audit.mismatches[:5]
+    assert audit.decisions == 2
+
+
 # --- parameter validation + submit-after-close -----------------------------------
 
 @pytest.mark.parametrize("kw", [
@@ -358,6 +408,37 @@ def test_feed_error_backoff_state_resets_on_good_tick():
     assert fe.backoff_delay() == pytest.approx(0.01)   # reset on success
     assert fe.ticker.tick_count == 2             # tick 1 landed on retry
     fe.close()
+
+
+def test_feed_error_failures_reset_across_fail_recover_fail():
+    """Satellite (ISSUE 8): the consecutive-failures counter that feeds
+    both the journaled ``failures`` field and the backoff delay restarts
+    from base after the *first* successful poll — a second outage
+    journals failures 1,2 again (never 3,4), and the healthy feed never
+    inherits the inflated delay."""
+    import json
+    store, ids, base = _universe()
+    feed = _FlakyFeed(_recorded(base, n_ticks=5), fail_ticks=(1, 3),
+                      times=2)
+    svc = SelectionService(IdentityCatalog(ids), store, PriceTable(base))
+    fe = ServeFrontend(svc, feed, workers=1, backoff_base=0.01)
+    statuses = []
+    while fe.ticker.tick_count < 5:
+        statuses.append(fe.step_tick())
+        if statuses[-1] == "tick":
+            # first good poll after an outage: delay back at base
+            assert fe.backoff_delay() == pytest.approx(0.01)
+    assert statuses.count("feed-error") == 4     # two outages, 2x each
+    assert statuses.count("tick") == 5
+    fe.close()
+    records = [json.loads(ln)
+               for ln in fe.journal_dump().splitlines()[1:]]
+    errs = [r for r in records if r["kind"] == "feed-error"]
+    assert [e["failures"] for e in errs] == [1, 2, 1, 2]
+    assert [e["tick"] for e in errs] == [1, 1, 3, 3]
+    audit = JournalReplayer(store, fe.journal_dump()).audit()
+    assert audit.ok, audit.mismatches[:5]
+    assert audit.feed_errors == 4
 
 
 # --- satellite: retirement + revival through the control path --------------------

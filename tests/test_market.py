@@ -505,6 +505,38 @@ def test_daemon_feed_error_typed_path_keeps_serving():
     assert e.value.tick == 7
 
 
+def test_daemon_feed_error_failures_reset_after_recovery():
+    """Satellite (ISSUE 8): the daemon's consecutive-failures counter
+    restarts at 1 for a fresh outage after a successful poll — a
+    fail/recover/fail sequence journals ``failures`` 1,2,1,2, never
+    carrying the first outage's count into the second."""
+    from repro.market import JournalReplayer
+
+    daemon = make_daemon()
+    inner_poll = daemon.ticker.feed.poll
+    remaining = {0: 2, 1: 2}             # two failures at ticks 0 and 1
+
+    def flaky_poll(tick):
+        if remaining.get(tick, 0) > 0:
+            remaining[tick] -= 1
+            raise ConnectionError(f"transient market outage at {tick}")
+        return inner_poll(tick)
+
+    daemon.ticker.feed.poll = flaky_poll
+    for _ in range(6):       # fail, fail, tick 0, fail, fail, tick 1
+        daemon.handle(Tick())
+    assert daemon.stats.ticks == 2
+    assert daemon.stats.feed_errors == 4
+    records = [json.loads(ln)
+               for ln in daemon.journal_dump().splitlines()[1:]]
+    errs = [r for r in records if r["kind"] == "feed-error"]
+    assert [e["failures"] for e in errs] == [1, 2, 1, 2]
+    assert [e["tick"] for e in errs] == [0, 0, 1, 1]
+    audit = JournalReplayer(daemon.service.store,
+                            daemon.journal_dump()).audit()
+    assert audit.ok and audit.feed_errors == 4
+
+
 def test_daemon_propagates_misconfiguration():
     """Only NothingRankableError is a routine rejection; a genuine
     misconfiguration (here: an unknown ranking backend) must propagate

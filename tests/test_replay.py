@@ -775,6 +775,43 @@ def test_bundled_fixture_batched_topk_daemon_audits_in_tolerance_mode():
     assert ev.mean_deviation < ev.static_mean_deviation
 
 
+def test_bundled_fixture_sharded_daemon_audits_in_tolerance_mode():
+    """ISSUE 8 acceptance: a *device-sharded* fleet daemon over the
+    bundled ``gcp_spot_prices.csv`` fixture journals decisions the
+    tolerance audit confirms against cold float64 re-ranks — the C axis
+    split across every available device, one collective shard_map
+    dispatch per price epoch, device-side per-shard top-k merged on the
+    host — and the dynamic evaluation still beats the static-price
+    oracle.  The journal stamps ``"backend": "jax_sharded"`` and the
+    unmodified replayer resolves it to the tolerance contract."""
+    pytest.importorskip("jax")
+    from repro.core import costmodel, spark_sim
+    from repro.market import synthetic_stream
+    from repro.selector import GcpVmCatalog, score_contract
+    trace = spark_sim.generate_trace(seed=0)
+    store = ProfilingStore.from_trace(trace)
+    catalog = GcpVmCatalog(trace.configs, costmodel.LinearPriceModel())
+    svc = SelectionService(catalog, store, PriceTable.from_catalog(catalog),
+                           backend="jax_sharded", serve_top_k=1)
+    daemon = SelectionDaemon(svc, RecordedPriceFeed.load(PRICE_FIXTURE))
+    daemon.run(synthetic_stream([j.name for j in trace.jobs], 400, seed=3,
+                                tick_fraction=0.15))
+    replayer = JournalReplayer(store, daemon.journal_dump())
+    assert replayer.backend == "jax_sharded"
+    audit = replayer.audit()
+    assert audit.ok, audit.mismatches[:3]
+    assert audit.contract == score_contract("jax_sharded")
+    assert not audit.contract.bit_identical
+    assert audit.decisions > 100 and audit.ticks > 10
+    assert all(d.served_via == "top_k" for d in replayer.decisions())
+    # one collective dispatch per epoch once the fleet exists
+    assert audit.ticks - 1 <= svc.reprice_dispatches <= audit.ticks
+    ev = replayer.evaluate()
+    assert ev.summary()["backend"] == "jax_sharded"
+    assert 0.0 <= ev.mean_deviation < 0.25
+    assert ev.mean_deviation < ev.static_mean_deviation
+
+
 if __name__ == "__main__":
     import sys
     if "--regen-golden" in sys.argv:

@@ -6,10 +6,12 @@ window and an eviction spike, captured through
 :func:`~repro.market.record_feed` so the whole run is a pure function
 of the fixture bytes — with submissions interleaved across four-plus
 distinct (job class, exclusion) selections, i.e. a real fleet of live
-rankings.  Three legs: the numpy backend (bit-identical audit), the
+rankings.  Five legs: the numpy backend (bit-identical audit), the
 batched jax fleet backend (tolerance audit + the one-dispatch-per-tick
-accounting), and the batched backend serving every decision via
-device-side top-k (DESIGN.md §10).
+accounting), the batched backend serving every decision via device-side
+top-k (DESIGN.md §10), and the device-sharded fleet backend
+(DESIGN.md §13) with and without top-k serving — the same
+one-collective-dispatch-per-tick accounting over shard_map.
 
 Beyond "the audit passes", the soak pins the *resource* story:
 
@@ -30,8 +32,9 @@ from repro.core.trace import JobClass
 from repro.market import (JournalReplayer, MarketEvent, RecordedPriceFeed,
                           SelectionDaemon, SimulatedSpotFeed, Submission,
                           Tick, record_feed)
-from repro.selector import (IdentityCatalog, PriceTable, ProfilingStore,
-                            SelectionService, backend_available)
+from repro.selector import (FLEET_BACKENDS, IdentityCatalog, PriceTable,
+                            ProfilingStore, SelectionService,
+                            backend_available)
 
 N_TICKS = 220
 N_JOBS = 12
@@ -98,6 +101,8 @@ def _recorded_market(ids):
     ("numpy", None),
     ("jax_batched", None),
     ("jax_batched", 3),
+    ("jax_sharded", None),
+    ("jax_sharded", 3),
 ])
 def test_daemon_soak_long_recorded_market(backend, serve_top_k):
     if not backend_available(backend):
@@ -114,7 +119,7 @@ def test_daemon_soak_long_recorded_market(backend, serve_top_k):
     assert stats.epochs >= 180            # near-every tick moved prices
     assert stats.rejected == 0
     assert stats.decisions == stats.submissions >= 140
-    if backend == "jax_batched":
+    if backend in FLEET_BACKENDS:
         assert svc._batched is not None
         assert svc._batched.n_active == len(SOAK_SELECTIONS)
 
@@ -150,12 +155,13 @@ def test_daemon_soak_long_recorded_market(backend, serve_top_k):
     # drop-and-rebuild (the recorded feed applies all quotes through
     # reprice, so no state can ever miss an out-of-band apply)
     assert svc.reprice_refreshes >= stats.epochs    # fleet ramps up to 6
-    if backend == "jax_batched":
+    if backend in FLEET_BACKENDS:
         # THE batching claim: one kernel dispatch per price epoch,
         # regardless of how many live rankings the tick refreshes (the
         # very first epoch predates the fleet — the stream opens with a
         # tick before any submission has built a state — so it spends
-        # zero dispatches)
+        # zero dispatches); for jax_sharded that dispatch is the single
+        # collective shard_map step across every device
         assert stats.epochs - 1 <= svc.reprice_dispatches <= stats.epochs
         assert svc._batched.dispatches == svc.reprice_dispatches
     else:
