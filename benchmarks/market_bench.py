@@ -19,6 +19,12 @@ nonzero if a gated claim regresses, which is the CI gate):
   * one batched dispatch reprices a whole fleet of >=8 live rankings
     (``reprice_batched_*`` rows: ``one_dispatch_per_tick`` +
     ``within_contract`` gates, DESIGN.md §10);
+  * the fused Pallas delta-rank kernel (``jax_pallas``, DESIGN.md §14)
+    reprices the fleet in ONE ``pallas_call`` per tick within the same
+    contract, head-to-head against the XLA delta path
+    (``reprice_pallas_*`` rows: ``one_dispatch_per_tick`` +
+    ``within_contract`` gates; the speed column is informational — on
+    CPU the kernel runs ``interpret=True``);
   * device-side top-k serving beats the PR-4 materialize path end-to-end
     by >=3x at 64x10k (``topk_serve_*`` rows: the ``end_to_end_speedup``
     gate — one dispatch plus an O(k) readback versus per-state dispatches
@@ -48,9 +54,9 @@ from _bench_io import BenchRows
 from repro.core.trace import JobClass
 from repro.market import SelectionDaemon, SimulatedSpotFeed, synthetic_stream
 from repro.selector import (BatchedRankState, IdentityCatalog, JaxRankState,
-                            PriceTable, ProfilingStore, RankState,
-                            SelectionService, backend_available, rank_dense,
-                            score_contract)
+                            PallasBatchedRankState, PriceTable,
+                            ProfilingStore, RankState, SelectionService,
+                            backend_available, rank_dense, score_contract)
 
 ROWS = BenchRows("BENCH_MARKET_JSON", "BENCH_market.json")
 emit = ROWS.emit
@@ -319,6 +325,81 @@ def bench_reprice_batched(n_jobs: int, n_cfgs: int, frac: float,
     gate(name, "within_contract", within)
 
 
+def bench_reprice_pallas(n_jobs: int, n_cfgs: int, frac: float,
+                         n_states: int = 8, n_ticks: int = 10) -> None:
+    """ISSUE 9 acceptance: the fused Pallas delta-rank kernel
+    (``jax_pallas``, DESIGN.md §14) reprices the fleet in ONE
+    ``pallas_call`` per tick, within the jax ``ScoreContract`` of
+    per-member float64 references and head-to-head against the XLA
+    delta path.  Gated: ``one_dispatch_per_tick`` + ``within_contract``
+    (the speed column is informational — on CPU the kernel runs
+    ``interpret=True``, so the honest perf reading needs TPU)."""
+    name = f"reprice_pallas_{n_jobs}x{n_cfgs}" + (
+        "" if n_states == 8 else f"_{n_states}states")
+    if not backend_available("jax_pallas"):
+        emit(name, 0.0, "skipped=jax_unavailable")
+        return
+    from repro.kernels.ops import _interpret
+    hours, mask, prices, ids, rng = _universe(n_jobs, n_cfgs)
+    batches = _delta_batches(ids, prices, rng, n_ticks, frac)
+    members = _fleet_members(n_jobs, n_states, rng)
+    contract = score_contract("jax_pallas")
+
+    # contract sweep (untimed): every member, every tick, vs the
+    # float64 incremental references
+    fused = PallasBatchedRankState(hours, mask, prices, ids)
+    for key, rows in members.items():
+        fused.add_state(key, rows=rows)
+    refs = {key: RankState(hours[rows], mask[rows], prices.copy(), ids)
+            for key, rows in members.items()}
+    within = True
+    for batch in batches:
+        fused.reprice(batch)
+        for ref in refs.values():
+            ref.reprice(batch)
+        if not _within_contract_vs_refs(fused, refs, members, contract):
+            within = False
+            break
+
+    # timed head-to-head vs the XLA delta path (warm both jits first)
+    fused = PallasBatchedRankState(hours, mask, prices, ids)
+    batched = BatchedRankState(hours, mask, prices, ids)
+    for key, rows in members.items():
+        fused.add_state(key, rows=rows)
+        batched.add_state(key, rows=rows)
+    fused.reprice(batches[0])
+    batched.reprice(batches[0])
+    fused = PallasBatchedRankState(hours, mask, prices, ids)
+    for key, rows in members.items():
+        fused.add_state(key, rows=rows)
+    t0 = time.perf_counter()
+    for batch in batches:
+        fused.reprice(batch)
+    us_fused = (time.perf_counter() - t0) / n_ticks * 1e6
+    one_dispatch = fused.dispatches == n_ticks and \
+        fused.n_active == n_states
+    batched = BatchedRankState(hours, mask, prices, ids)
+    for key, rows in members.items():
+        batched.add_state(key, rows=rows)
+    t0 = time.perf_counter()
+    for batch in batches:
+        batched.reprice(batch)
+    us_xla = (time.perf_counter() - t0) / n_ticks * 1e6
+
+    emit(name, us_fused,
+         f"cells={n_jobs * n_cfgs};states={n_states};"
+         f"dispatches_per_tick={fused.dispatches / n_ticks:.2f};"
+         f"one_dispatch_per_tick={one_dispatch};"
+         f"xla_delta_us={us_xla:.1f};"
+         f"vs_xla_delta={us_xla / us_fused:.2f}x;"
+         f"interpret={_interpret()};"
+         f"within_contract={within};"
+         f"contract=rel{contract.rel_tol:g}/abs{contract.abs_tol:g}")
+    gate(name, f"one fused dispatch per tick for >= {n_states} live "
+               f"states", one_dispatch)
+    gate(name, "within_contract", within)
+
+
 def bench_reprice_sharded(n_jobs: int, n_cfgs: int, frac: float,
                           n_states: int = 8, n_ticks: int = 10,
                           n_devices: "int | None" = None,
@@ -528,8 +609,11 @@ def main(smoke: bool = False) -> None:
     bench_reprice(64, 1_000, 0.01)
     bench_reprice(64, 10_000, 0.01)
     bench_reprice_jax(64, 10_000, 0.01)
-    # the ISSUE 5/8 acceptance rows run in smoke mode too: CI gates them
+    # the ISSUE 5/8/9 acceptance rows run in smoke mode too: CI gates
+    # them (the pallas row's universe is sized for interpret mode on
+    # CPU — the kernel replays its grid step-by-step there)
     bench_reprice_batched(64, 10_000, 0.01)
+    bench_reprice_pallas(64, 2_000, 0.01)
     bench_topk_serve(64, 10_000, 0.01)
     # always-run small sharded row over whatever devices the host has,
     # plus the gated ISSUE 8 row (8 devices x 100k configs; emits a
@@ -542,6 +626,7 @@ def main(smoke: bool = False) -> None:
         bench_reprice(256, 10_000, 0.01)
         bench_reprice_jax(64, 10_000, 0.001)
         bench_reprice_batched(64, 10_000, 0.001, n_states=16)
+        bench_reprice_pallas(64, 2_000, 0.001, n_states=16)
         bench_reprice_sharded(64, 10_000, 0.001, n_states=16)
     bench_daemon(2_000 if smoke else 10_000)
     write_json()

@@ -48,7 +48,8 @@ def main() -> None:
     ap.add_argument("--events", type=int, default=400)
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--backend", default=None,
-                    choices=["numpy", "jax", "jax_batched", "jax_sharded"],
+                    choices=["numpy", "jax", "jax_batched", "jax_sharded",
+                             "jax_pallas"],
                     help="ranking backend (default: FLORA_RANK_BACKEND "
                          "env var, else numpy); jax_batched stacks every "
                          "live ranking into one batched kernel — a tick "

@@ -42,7 +42,8 @@ def main() -> None:
     ap.add_argument("--ticks", type=int, default=120)
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--backend", default=None,
-                    choices=["numpy", "jax", "jax_batched", "jax_sharded"],
+                    choices=["numpy", "jax", "jax_batched", "jax_sharded",
+                             "jax_pallas"],
                     help="ranking backend (default: FLORA_RANK_BACKEND "
                          "env var, else numpy)")
     args = ap.parse_args()

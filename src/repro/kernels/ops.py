@@ -3,29 +3,69 @@
 On TPU the Pallas kernels run natively; on CPU (this container) they run
 under ``interpret=True`` for correctness tests, while the model layers use
 their pure-jnp paths by default.  ``use_pallas(True)`` flips model-side
-dispatch (repro.models reads this at trace time).
+dispatch (repro.models reads this at trace time); it also works as a
+context manager — ``with use_pallas(): ...`` — which restores the prior
+value on exit and is the form tests should use.
+
+Two hot-path rules this module enforces (regression-tested in
+``tests/test_kernels.py``):
+
+* ``interpret`` is a **static jit argument resolved at call time**, never
+  read inside a traced function.  A trace-time read bakes the flag into
+  the jit cache, which is keyed only by shapes/static args — if
+  ``jax.default_backend()`` changes after the first call (or a test
+  forces a platform), the stale flag would silently replay.
+* the ``use_pallas`` toggle is guarded by a lock: the serving front-end
+  traces from N worker threads plus the tick thread concurrently, so a
+  bare global read-modify-write races.
 """
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rwkv6_scan import wkv6_pallas
 
 _FORCE_PALLAS = False
+_FORCE_LOCK = threading.Lock()
 
 
-def use_pallas(on: bool = True) -> None:
+class _PallasToggle:
+    """Returned by :func:`use_pallas`: the flag is already set (so the
+    bare-call form keeps working); used as a context manager it restores
+    the value that was live when :func:`use_pallas` was called."""
+
+    def __init__(self, prior: bool):
+        self._prior = prior
+
+    def __enter__(self) -> "_PallasToggle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        global _FORCE_PALLAS
+        with _FORCE_LOCK:
+            _FORCE_PALLAS = self._prior
+
+
+def use_pallas(on: bool = True) -> _PallasToggle:
+    """Force model-side Pallas dispatch on/off (thread-safe).  Use the
+    context-manager form in tests — ``with use_pallas(): ...`` — so the
+    prior value is restored however the block exits."""
     global _FORCE_PALLAS
-    _FORCE_PALLAS = on
+    with _FORCE_LOCK:
+        prior = _FORCE_PALLAS
+        _FORCE_PALLAS = on
+    return _PallasToggle(prior)
 
 
 def pallas_enabled() -> bool:
-    return _FORCE_PALLAS or jax.default_backend() == "tpu"
+    with _FORCE_LOCK:
+        forced = _FORCE_PALLAS
+    return forced or jax.default_backend() == "tpu"
 
 
 def _interpret() -> bool:
@@ -33,18 +73,39 @@ def _interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_kv"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None,
-                    block_q: int = 128, block_kv: int = 128):
-    """Flash attention (Pallas), interpreted on CPU."""
+                                             "block_kv", "interpret"))
+def _flash_attention_jit(q, k, v, *, causal, window, block_q, block_kv,
+                         interpret):
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   block_q=block_q, block_kv=block_kv,
-                                  interpret=_interpret())
+                                  interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def wkv6(r, k, v, w, u, s0, *, chunk: int = 64):
-    """RWKV-6 recurrence (Pallas), interpreted on CPU."""
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: Optional[bool] = None):
+    """Flash attention (Pallas), interpreted on CPU.  ``interpret=None``
+    resolves from the *current* default backend, outside the trace, so
+    the jit cache keys on it (a backend change re-traces instead of
+    replaying the first call's flag)."""
+    if interpret is None:
+        interpret = _interpret()
+    return _flash_attention_jit(q, k, v, causal=causal, window=window,
+                                block_q=block_q, block_kv=block_kv,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _wkv6_jit(r, k, v, w, u, s0, *, chunk, interpret):
     return wkv6_pallas(r, k, v, w, u, s0, chunk=chunk,
-                       interpret=_interpret())
+                       interpret=interpret)
+
+
+def wkv6(r, k, v, w, u, s0, *, chunk: int = 64,
+         interpret: Optional[bool] = None):
+    """RWKV-6 recurrence (Pallas), interpreted on CPU; ``interpret`` is
+    resolved at call time like :func:`flash_attention`."""
+    if interpret is None:
+        interpret = _interpret()
+    return _wkv6_jit(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)

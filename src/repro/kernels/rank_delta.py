@@ -1,0 +1,313 @@
+"""Fused Pallas delta-rank reprice kernel (the ``jax_pallas`` backend).
+
+The XLA delta step (:func:`repro.selector.rank._delta_universe_update`
+plus the batched score fold) is ~5 streamed passes over the (J x C)
+universe per tick: gather/scatter the changed cost columns, a full
+``cost.min(axis=1)``, a full renormalization, and two matmuls over
+J x C operands — each materializing an intermediate in HBM between XLA
+fusions.  This module fuses the whole tick into **one**
+``pl.pallas_call`` over the (S x J x C)-tiled universe:
+
+* **changed-column score re-reduction** — every member's score on a
+  changed column is re-reduced from scratch (``P = row_masks @
+  norm_new`` restricted to changed columns), the ``.set`` semantics the
+  ScoreContract's drift story depends on;
+* **masked row-min handoff detection** — the fresh masked row minimum
+  falls out of the same streamed tiles (see below), and the handoff
+  count (#rows whose minimum moved) is accumulated into a scalar
+  output;
+* **accumulator score updates** — unchanged columns fold
+  ``D = row_masks @ (norm_new - norm_old)`` into the standing
+  accumulators; rows whose minimum did not move contribute *exact*
+  zeros (see the recompute identity below), so a no-handoff tick is
+  drift-free, exactly like the XLA path.
+
+**Why the handoff-row min needs no second pass over universe state**
+(DESIGN.md §14): the kernel keeps *no* resident cost or norm matrix.
+Both are recomputed in-stream from the read-only ``hours``/``mask``
+residents and the price vectors — float32 elementwise multiply and
+divide are deterministic IEEE ops, so an unchanged column's
+recomputed cost is bit-identical to what a stored matrix would hold,
+and ``norm_new - norm_old`` is an exact ``0.0`` wherever nothing
+moved.  The fresh row minimum is therefore a byproduct of the same
+tile stream (phase 0 of the grid), not a second pass over a
+delta-patched cost matrix; resident per-tick state shrinks to the
+price vector, the row minima and the score accumulators.
+
+**Tiling.**  The grid is ``(2, C//block_c, J//block_j)``: phase 0
+sweeps the tiles accumulating the masked row minima of the *new* cost
+into a ``(J, 1)`` VMEM scratch; phase 1 recomputes both norms per tile
+and accumulates the two member matmuls (``S x block_j @ block_j x
+block_c``).  The j axis is innermost so each ``(S, block_c)`` output
+block sees its accumulation visits consecutively (the Pallas
+revisiting rule); with the default single C tile the input blocks keep
+their index across the phase boundary, so HBM streams ``hours``/
+``mask`` once per tick.  The member axis S rides whole in every block.
+
+Like the other kernels in this package the Pallas body runs natively on
+TPU and under ``interpret=True`` on CPU; ``interpret`` is a *static*
+argument resolved at call time (never baked into a jit trace — the
+regression the ops.py wrappers fixed).  The lazy jitted dispatch is
+built under a lock: the serving front-end first-calls from N worker
+threads plus the tick thread concurrently.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ops import _interpret
+
+__all__ = ["fused_reprice", "fused_reprice_heads", "rank_delta_fns"]
+
+
+def _make_kernel(block_j: int, n_j_tiles: int, n_c_tiles: int,
+                 heads: Optional[int]):
+    """The fused kernel body; ``heads=k`` adds the in-kernel top-k tail
+    (requires a single C tile — the final scores must be resident)."""
+
+    def kernel(hours_ref, mask_ref, oldp_ref, newp_ref, chg_ref,
+               rb_in_ref, rm_ref, scores_in_ref, *refs):
+        if heads is None:
+            scores_out_ref, rb_out_ref, moved_ref = refs[:3]
+            rb_scr, p_acc = refs[3:]
+        else:
+            fin_ref = refs[0]
+            scores_out_ref, rb_out_ref, moved_ref = refs[1:4]
+            ti_ref, tv_ref = refs[4:6]
+            rb_scr, p_acc = refs[6:]
+        p = pl.program_id(0)
+        c = pl.program_id(1)
+        j = pl.program_id(2)
+        jsl = pl.ds(j * block_j, block_j)
+        hours = hours_ref[...]                        # (Jt, Ct)
+        mask = mask_ref[...]
+        # the new cost tile, recomputed in-stream: unchanged columns
+        # reproduce the old cost bit-for-bit (deterministic IEEE mul),
+        # so no resident cost matrix — and no second pass over one —
+        # is needed to find the fresh masked row minima
+        cost_new = jnp.where(mask, hours * newp_ref[...], jnp.inf)
+
+        @pl.when((p == 0) & (c == 0) & (j == 0))
+        def _init():
+            moved_ref[...] = jnp.zeros_like(moved_ref)
+
+        @pl.when(p == 0)
+        def _min_scan():
+            # phase 0: running masked row minima across the C tiles
+            tile_min = jnp.min(cost_new, axis=1, keepdims=True)
+
+            @pl.when(c == 0)
+            def _():
+                rb_scr[jsl, :] = tile_min
+
+            @pl.when(c > 0)
+            def _():
+                rb_scr[jsl, :] = jnp.minimum(rb_scr[jsl, :], tile_min)
+
+        @pl.when(p == 1)
+        def _fold():
+            # phase 1: both norms recomputed per tile, two member
+            # matmuls accumulated, handoffs counted — rb_scr is final
+            # (phase 0 swept every tile before phase 1 starts)
+            cost_old = jnp.where(mask, hours * oldp_ref[...], jnp.inf)
+            rb_old = rb_in_ref[jsl, :]                # (Jt, 1)
+            fresh = rb_scr[jsl, :]
+            norm_old = jnp.where(mask, cost_old / rb_old, 0.0)
+            norm_new = jnp.where(mask, cost_new / fresh, 0.0)
+            rm = rm_ref[...]                          # (S, Jt)
+            dims = (((1,), (0,)), ((), ()))
+            re_reduce = jax.lax.dot_general(
+                rm, norm_new, dims, preferred_element_type=jnp.float32)
+            delta = jax.lax.dot_general(
+                rm, norm_new - norm_old, dims,
+                preferred_element_type=jnp.float32)
+
+            @pl.when(j == 0)
+            def _():
+                scores_out_ref[...] = delta
+                p_acc[...] = re_reduce
+
+            @pl.when(j > 0)
+            def _():
+                scores_out_ref[...] += delta
+                p_acc[...] += re_reduce
+
+            @pl.when(c == 0)
+            def _():
+                # handoff detection + the fresh minima, once per j tile
+                rb_out_ref[jsl, :] = fresh
+                moved_ref[0, 0] += jnp.sum(
+                    (fresh != rb_old).astype(jnp.int32))
+
+            @pl.when(j == n_j_tiles - 1)
+            def _combine():
+                # changed columns: re-set from the scratch re-reduction;
+                # unchanged: fold the (exact-zero-for-unmoved-rows)
+                # delta into the standing accumulators
+                chg = chg_ref[...] > 0                # (1, Ct)
+                scores_out_ref[...] = jnp.where(
+                    chg, p_acc[...],
+                    scores_in_ref[...] + scores_out_ref[...])
+                if heads is not None:
+                    # the fused top-k tail: iterative masked argmin
+                    # over the just-finalized resident scores —
+                    # jnp.argmin's first-occurrence tie-break IS the
+                    # catalog-order tie-break of _materialize
+                    masked = jnp.where(fin_ref[...], scores_out_ref[...],
+                                       jnp.inf)
+                    cols2 = jax.lax.broadcasted_iota(
+                        jnp.int32, masked.shape, 1)
+                    for t in range(heads):
+                        tv_ref[:, t] = jnp.min(masked, axis=1)
+                        idx = jnp.argmin(masked, axis=1)
+                        ti_ref[:, t] = idx.astype(jnp.int32)
+                        masked = jnp.where(cols2 == idx[:, None],
+                                           jnp.inf, masked)
+
+    return kernel
+
+
+def _check_tiling(shape_j: int, shape_c: int, block_j: int,
+                  block_c: int) -> Tuple[int, int]:
+    if block_j < 1 or shape_j % block_j:
+        raise ValueError(f"block_j={block_j} must divide the (padded) "
+                         f"job axis {shape_j}")
+    if block_c < 1 or shape_c % block_c:
+        raise ValueError(f"block_c={block_c} must divide the config "
+                         f"axis {shape_c}")
+    return shape_j // block_j, shape_c // block_c
+
+
+def _fused_call(hours, mask, old_prices, new_prices, changed, row_best,
+                row_masks, scores, finite, *, block_j, block_c, heads,
+                interpret):
+    """Build and invoke the single fused ``pallas_call`` for one tick."""
+    J, C = hours.shape
+    S = row_masks.shape[0]
+    nj, nc = _check_tiling(J, C, block_j, block_c)
+    if heads is not None and nc != 1:
+        raise ValueError("the fused reprice+top-k variant needs the "
+                         "final scores resident: use block_c == C")
+    kernel = _make_kernel(block_j, nj, nc, heads)
+    vec = lambda p, c, j: (0, c)                     # (1, Ct) vectors
+    tile = lambda p, c, j: (j, c)                    # (Jt, Ct) tiles
+    whole = lambda p, c, j: (0, 0)                   # resident blocks
+    in_specs = [
+        pl.BlockSpec((block_j, block_c), tile),      # hours
+        pl.BlockSpec((block_j, block_c), tile),      # mask
+        pl.BlockSpec((1, block_c), vec),             # old prices
+        pl.BlockSpec((1, block_c), vec),             # new prices
+        pl.BlockSpec((1, block_c), vec),             # changed columns
+        pl.BlockSpec((J, 1), whole),                 # row_best in
+        pl.BlockSpec((S, block_j), lambda p, c, j: (0, j)),  # row masks
+        pl.BlockSpec((S, block_c), vec),             # scores in
+    ]
+    args = [hours, mask, old_prices, new_prices, changed, row_best,
+            row_masks, scores]
+    out_specs = [
+        pl.BlockSpec((S, block_c), vec),             # scores out
+        pl.BlockSpec((J, 1), whole),                 # row_best out
+        pl.BlockSpec((1, 1), whole),                 # handoff count
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((S, C), jnp.float32),
+        jax.ShapeDtypeStruct((J, 1), jnp.float32),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+    ]
+    if heads is not None:
+        in_specs.insert(8, pl.BlockSpec((S, block_c), vec))  # finite
+        args.insert(8, finite)
+        out_specs += [pl.BlockSpec((S, heads), whole),
+                      pl.BlockSpec((S, heads), whole)]
+        out_shape += [jax.ShapeDtypeStruct((S, heads), jnp.int32),
+                      jax.ShapeDtypeStruct((S, heads), jnp.float32)]
+    return pl.pallas_call(
+        kernel,
+        grid=(2, nc, nj),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((J, 1), jnp.float32),
+                        pltpu.VMEM((S, block_c), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+
+
+def _reprice(hours, mask, old_prices, new_prices, changed, row_best,
+             row_masks, scores, *, block_j, block_c, interpret):
+    return _fused_call(hours, mask, old_prices, new_prices, changed,
+                       row_best, row_masks, scores, None,
+                       block_j=block_j, block_c=block_c, heads=None,
+                       interpret=interpret)
+
+
+def _reprice_heads(hours, mask, old_prices, new_prices, changed,
+                   row_best, row_masks, scores, finite, *, block_j,
+                   block_c, k, interpret):
+    return _fused_call(hours, mask, old_prices, new_prices, changed,
+                       row_best, row_masks, scores, finite,
+                       block_j=block_j, block_c=block_c, heads=k,
+                       interpret=interpret)
+
+
+# the lazy jitted dispatch, built once under a lock (double-checked):
+# the serving front-end first-calls from N snapshot workers plus the
+# tick thread concurrently, the same hazard the rank.py singletons fix
+_RANK_DELTA_FNS: Optional[Tuple[Any, Any]] = None
+_RANK_DELTA_LOCK = threading.Lock()
+
+
+def rank_delta_fns() -> Tuple[Any, Any]:
+    """``(reprice, reprice_heads)`` jitted fused kernels, built once on
+    first use (importing the package never initializes a backend).
+    ``interpret`` is a static jit argument — callers resolve it at call
+    time, so a backend change re-traces instead of replaying a stale
+    flag from the jit cache."""
+    global _RANK_DELTA_FNS
+    if _RANK_DELTA_FNS is None:
+        with _RANK_DELTA_LOCK:
+            if _RANK_DELTA_FNS is None:
+                _RANK_DELTA_FNS = (
+                    jax.jit(_reprice,
+                            static_argnames=("block_j", "block_c",
+                                             "interpret")),
+                    jax.jit(_reprice_heads,
+                            static_argnames=("block_j", "block_c", "k",
+                                             "interpret")),
+                )
+    return _RANK_DELTA_FNS
+
+
+def fused_reprice(hours, mask, old_prices, new_prices, changed,
+                  row_best, row_masks, scores, *, block_j: int,
+                  block_c: int, interpret: Optional[bool] = None):
+    """One fused tick: ``(scores, row_best, moved)`` from the streamed
+    universe.  ``interpret=None`` resolves from the current default
+    backend at call time (interpreted everywhere but TPU)."""
+    if interpret is None:
+        interpret = _interpret()
+    return rank_delta_fns()[0](
+        hours, mask, old_prices, new_prices, changed, row_best,
+        row_masks, scores, block_j=block_j, block_c=block_c,
+        interpret=interpret)
+
+
+def fused_reprice_heads(hours, mask, old_prices, new_prices, changed,
+                        row_best, row_masks, scores, finite, *,
+                        block_j: int, block_c: int, k: int,
+                        interpret: Optional[bool] = None):
+    """The fused reprice+top-k variant: additionally returns every
+    member's k best ``(indices, values)`` computed in-kernel from the
+    just-finalized scores (single C tile only)."""
+    if interpret is None:
+        interpret = _interpret()
+    return rank_delta_fns()[1](
+        hours, mask, old_prices, new_prices, changed, row_best,
+        row_masks, scores, finite, block_j=block_j, block_c=block_c,
+        k=k, interpret=interpret)

@@ -30,8 +30,9 @@ JOURNAL_FORMAT = "repro.market.decision-journal"
 #: carry the applied deltas, decision records carry the winner's score
 #: and the effective exclusion set.  Within v2, the header also stamps
 #: the service's ranking ``backend`` — replays pick their audit mode
-#: from it (numpy: bit-identical; jax/jax_batched/jax_sharded: the
-#: tolerance contract, DESIGN.md §9-§10, §13); journals written before
+#: from it (numpy: bit-identical; jax/jax_batched/jax_sharded/
+#: jax_pallas: the tolerance contract, DESIGN.md §9-§10, §13-§14);
+#: journals written before
 #: the stamp read as numpy.  New backend names are additive: the stamp
 #: is data, and consumers resolve it through ``score_contract``.  Decision records served via device-side top-k carry an
 #: additive ``served_via`` field (absent = full-ranking serving); a

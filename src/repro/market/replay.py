@@ -429,8 +429,8 @@ class JournalReplayer:
           stamped price epoch are compared with exact equality.  JSON
           floats round-trip through ``repr``, so one ulp of drift
           anywhere in the reprice path surfaces here.
-        * **jax / jax_batched / jax_sharded** — tolerance mode: the
-          journaled winner
+        * **jax / jax_batched / jax_sharded / jax_pallas** — tolerance
+          mode: the journaled winner
           must be the cold winner or tied with it within the contract,
           and the journaled score must be within rel/abs tolerance of
           that config's cold score.  Within-contract divergence —

@@ -38,6 +38,7 @@ from repro.selector.rank import (BACKEND_ENV_VAR, BACKENDS,
                                  ScoreContract, backend_available,
                                  default_backend, rank_dense, rank_pairs,
                                  score_contract)
+from repro.selector.pallas_rank import PallasBatchedRankState
 from repro.selector.sharded import ShardedBatchedRankState
 from repro.selector.store import ProfilingStore
 from repro.selector.service import Decision, SelectionService
@@ -46,7 +47,8 @@ __all__ = [
     "BACKEND_ENV_VAR", "BACKENDS", "BackendUnavailableError", "BaseCatalog",
     "BatchedRankState", "Decision", "FLEET_BACKENDS", "GcpVmCatalog",
     "IdentityCatalog", "JaxRankState",
-    "NothingRankableError", "PriceTable", "ProfilingStore", "RankState",
+    "NothingRankableError", "PallasBatchedRankState", "PriceTable",
+    "ProfilingStore", "RankState",
     "RankedConfig", "ResourceCatalog", "SCORE_CONTRACTS", "ScoreContract",
     "SelectionService", "ShardedBatchedRankState", "TpuSliceCatalog",
     "backend_available",

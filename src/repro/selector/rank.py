@@ -32,7 +32,11 @@ is a *single* dispatch for every live ranking (DESIGN.md §10); the
 ``"jax_sharded"`` (:mod:`repro.selector.sharded`) shards that batched
 universe's config axis across every local device, so one *collective*
 dispatch per tick reprices the fleet at catalogs no single device holds
-(DESIGN.md §13).  Every state also serves :meth:`top_k` — the head of
+(DESIGN.md §13).  ``"jax_pallas"``
+(:mod:`repro.selector.pallas_rank`) replaces the batched tick's
+two-matmul + mask/min/norm XLA sequence with ONE fused Pallas kernel
+over the tiled universe (:mod:`repro.kernels.rank_delta`, DESIGN.md
+§14).  Every state also serves :meth:`top_k` — the head of
 the ranking without materializing and sorting all C configs
 (``jax.lax.top_k`` on device for the jax-family states, a partial
 selection on numpy).
@@ -41,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 from typing import (Any, Callable, Hashable, List, Mapping, Optional,
                     Sequence, Tuple, Union)
 
@@ -64,14 +69,19 @@ BACKEND_ENV_VAR = "FLORA_RANK_BACKEND"
 #: universe across every local device
 #: (:class:`~repro.selector.sharded.ShardedBatchedRankState`) — one
 #: *collective* dispatch per tick for catalogs too large for one
-#: device (DESIGN.md §13).
-BACKENDS = ("numpy", "jax", "jax_batched", "jax_sharded")
+#: device (DESIGN.md §13).  ``"jax_pallas"``
+#: (:class:`~repro.selector.pallas_rank.PallasBatchedRankState`) runs
+#: the batched tick as ONE fused Pallas kernel
+#: (:mod:`repro.kernels.rank_delta`) instead of the two-matmul +
+#: mask/min/norm XLA sequence — native on TPU, ``interpret=True``
+#: elsewhere (DESIGN.md §14).
+BACKENDS = ("numpy", "jax", "jax_batched", "jax_sharded", "jax_pallas")
 #: the fleet backends: a SelectionService on one of these stacks every
 #: live (class, exclusion) ranking into a single shared state, so a
 #: price tick is one (possibly collective) kernel dispatch fleet-wide.
-FLEET_BACKENDS = ("jax_batched", "jax_sharded")
+FLEET_BACKENDS = ("jax_batched", "jax_sharded", "jax_pallas")
 #: backends whose runtime dependency is jax.
-_JAX_FAMILY = ("jax", "jax_batched", "jax_sharded")
+_JAX_FAMILY = ("jax", "jax_batched", "jax_sharded", "jax_pallas")
 
 
 class BackendUnavailableError(RuntimeError):
@@ -169,13 +179,23 @@ SCORE_CONTRACTS: Mapping[str, ScoreContract] = {
     # again identical (DESIGN.md §13).
     "jax_sharded": ScoreContract("jax_sharded", bit_identical=False,
                                  rel_tol=1e-4, abs_tol=1e-6),
+    # the fused Pallas kernel recomputes cost/norm in-stream from the
+    # same float32 elementwise expressions (deterministic IEEE ops ->
+    # bit-identical cells), re-reduces changed columns from scratch and
+    # delta-folds handoff rows exactly like the XLA step — only matmul
+    # reduction *order* differs, which the shared rel/abs envelope
+    # already covers, so journals and tolerance-mode audits carry over
+    # unchanged (DESIGN.md §14).
+    "jax_pallas": ScoreContract("jax_pallas", bit_identical=False,
+                                rel_tol=1e-4, abs_tol=1e-6),
 }
 
 
 def backend_available(backend: str) -> bool:
     """Can ``backend`` actually run here?  ``"numpy"`` always; the
     jax-family backends (``"jax"``, ``"jax_batched"``,
-    ``"jax_sharded"``) only when jax imports.  Unknown names are *not*
+    ``"jax_sharded"``, ``"jax_pallas"``) only when jax imports.
+    Unknown names are *not*
     an error from this predicate (they fail later with ``ValueError``
     at dispatch)."""
     return backend not in _JAX_FAMILY or _HAVE_JAX
@@ -589,6 +609,12 @@ def _validated_delta_cols(pos: Mapping[Hashable, int],
 if _HAVE_JAX:
     _JAX_STATE_FNS: Optional[Tuple[Any, Any, Any]] = None
     _JAX_TOPK_FN: Optional[Any] = None
+    #: guards every lazy jitted-kernel singleton below (double-checked
+    #: locking): the serving front-end first-calls from N snapshot
+    #: workers plus the tick thread concurrently, and an unlocked
+    #: check-then-build can build twice and interleave partially-
+    #: initialized reads (regression-stressed in tests/test_kernels.py)
+    _JAX_FNS_LOCK = threading.Lock()
 
     def _delta_universe_update(prices, cost, row_best, hours, mask,
                                cols, new_prices):
@@ -636,11 +662,13 @@ if _HAVE_JAX:
         delta buckets."""
         global _JAX_TOPK_FN
         if _JAX_TOPK_FN is None:
-            def topk(scores, finite, k):
-                masked = jnp.where(finite, scores, jnp.inf)
-                neg, idx = jax.lax.top_k(-masked, k)
-                return idx, -neg
-            _JAX_TOPK_FN = jax.jit(topk, static_argnums=2)
+            with _JAX_FNS_LOCK:
+                if _JAX_TOPK_FN is None:
+                    def topk(scores, finite, k):
+                        masked = jnp.where(finite, scores, jnp.inf)
+                        neg, idx = jax.lax.top_k(-masked, k)
+                        return idx, -neg
+                    _JAX_TOPK_FN = jax.jit(topk, static_argnums=2)
         return _JAX_TOPK_FN
 
     def _jax_state_fns() -> Tuple[Any, Any, Any]:
@@ -653,6 +681,13 @@ if _HAVE_JAX:
         global _JAX_STATE_FNS
         if _JAX_STATE_FNS is not None:
             return _JAX_STATE_FNS
+        with _JAX_FNS_LOCK:
+            if _JAX_STATE_FNS is not None:
+                return _JAX_STATE_FNS
+            return _build_jax_state_fns()
+
+    def _build_jax_state_fns() -> Tuple[Any, Any, Any]:
+        global _JAX_STATE_FNS
 
         def cold(hours, mask, prices):
             # the cold-path arithmetic (float32): the state a delta
@@ -869,6 +904,13 @@ if _HAVE_JAX:
         global _JAX_BATCHED_FNS
         if _JAX_BATCHED_FNS is not None:
             return _JAX_BATCHED_FNS
+        with _JAX_FNS_LOCK:
+            if _JAX_BATCHED_FNS is not None:
+                return _JAX_BATCHED_FNS
+            return _build_jax_batched_fns()
+
+    def _build_jax_batched_fns() -> Tuple[Any, Any]:
+        global _JAX_BATCHED_FNS
 
         def step(prices, cost, row_best, norm, scores, hours, mask,
                  row_masks, cols, new_prices):

@@ -34,6 +34,7 @@ from repro.selector.rank import (BACKENDS, FLEET_BACKENDS,
                                  NothingRankableError, RankedConfig,
                                  RankState, backend_available,
                                  default_backend)
+from repro.selector.pallas_rank import PallasBatchedRankState
 from repro.selector.sharded import ShardedBatchedRankState
 from repro.selector.store import ProfilingStore
 
@@ -373,9 +374,11 @@ class SelectionService:
                 all_jobs = self.store.job_ids
                 hours, mask = self.store.matrix(job_ids=all_jobs,
                                                 config_ids=config_ids)
-                fleet_cls = (BatchedRankState
-                             if self.backend == "jax_batched"
-                             else ShardedBatchedRankState)
+                fleet_cls = {
+                    "jax_batched": BatchedRankState,
+                    "jax_sharded": ShardedBatchedRankState,
+                    "jax_pallas": PallasBatchedRankState,
+                }[self.backend]
                 b = fleet_cls(hours, mask, prices, config_ids,
                               job_ids=all_jobs,
                               metrics=self.metrics)

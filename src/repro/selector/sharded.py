@@ -42,6 +42,7 @@ initializes a backend; kernels compile on first use, per device count.
 """
 from __future__ import annotations
 
+import threading
 from typing import (Any, Dict, Hashable, List, Mapping, Optional,
                     Sequence, Tuple, Union)
 
@@ -68,8 +69,12 @@ MERGE_SPAN = "shard.merge"
 # jitted-kernel caches, keyed per device count (the mesh is part of the
 # shard_map closure).  k in the top-k kernel is additionally static,
 # like the single-device top_k — one compile per (device count, depth).
+# Builds run under the lock (double-checked, like the rank.py
+# singletons): concurrent first-calls from the serving front-end's
+# workers would otherwise build the same mesh kernels twice.
 _FNS: "Dict[int, Tuple[Any, Any, Any]]" = {}
 _TOPK: "Dict[Tuple[int, int, int], Any]" = {}
+_SHARDED_LOCK = threading.Lock()
 
 
 def _mesh(n_dev: int) -> "Mesh":
@@ -90,6 +95,14 @@ def _sharded_fns(n_dev: int) -> Tuple[Any, Any, Any]:
     cached = _FNS.get(n_dev)
     if cached is not None:
         return cached
+    with _SHARDED_LOCK:
+        cached = _FNS.get(n_dev)
+        if cached is not None:
+            return cached
+        return _build_sharded_fns(n_dev)
+
+
+def _build_sharded_fns(n_dev: int) -> Tuple[Any, Any, Any]:
     mesh = _mesh(n_dev)
     spec_c = P(None, "c")   # (rows, C_pad) matrices, C sharded
     spec_v = P("c")         # (C_pad,) vectors
@@ -177,6 +190,15 @@ def _sharded_topk_fn(n_dev: int, k_loc: int, c_loc: int) -> Any:
     cached = _TOPK.get(key)
     if cached is not None:
         return cached
+    with _SHARDED_LOCK:
+        cached = _TOPK.get(key)
+        if cached is not None:
+            return cached
+        return _build_sharded_topk_fn(key)
+
+
+def _build_sharded_topk_fn(key: Tuple[int, int, int]) -> Any:
+    n_dev, k_loc, c_loc = key
     mesh = _mesh(n_dev)
 
     def topk_local(scores, finite, slot):

@@ -428,8 +428,9 @@ NO_JAX_PROBE = textwrap.dedent("""
     sys.modules["jax.numpy"] = None
 
     from repro.selector import (BackendUnavailableError, JaxRankState,
-                                SelectionService, IdentityCatalog,
-                                PriceTable, ProfilingStore, rank_dense)
+                                PallasBatchedRankState, SelectionService,
+                                IdentityCatalog, PriceTable,
+                                ProfilingStore, rank_dense)
     import repro.selector.rank as rank
     assert not rank._HAVE_JAX
 
@@ -452,9 +453,13 @@ NO_JAX_PROBE = textwrap.dedent("""
         lambda: rank_dense(hours, mask, prices, ["a", "b"],
                            backend="jax"),
         lambda: JaxRankState(hours, mask, prices, ["a", "b"]),
+        lambda: PallasBatchedRankState(hours, mask, prices, ["a", "b"]),
         lambda: SelectionService(IdentityCatalog(["a", "b"]), store,
                                  PriceTable({"a": 3.0, "b": 4.0}),
                                  backend="jax"),
+        lambda: SelectionService(IdentityCatalog(["a", "b"]), store,
+                                 PriceTable({"a": 3.0, "b": 4.0}),
+                                 backend="jax_pallas"),
     ):
         try:
             attempt()

@@ -570,7 +570,8 @@ def test_service_jax_batched_backend_one_dispatch_per_tick():
     assert svc.reprice_dispatches == 2
 
 
-@pytest.mark.parametrize("backend", ["numpy", "jax", "jax_batched"])
+@pytest.mark.parametrize("backend", ["numpy", "jax", "jax_batched",
+                                     "jax_pallas"])
 def test_service_top_k_decision_matches_full_serving(backend):
     """A top-k-served Decision carries the same winner, score and $/h
     as a full-ranking Decision from an identically-priced service — the

@@ -268,6 +268,14 @@ def test_k_boundary_parity_across_all_backends(n_cfgs):
             head = b.top_k("all", k)
             assert head == b.ranking("all")[:min(k, C)], ("batched", k)
             heads[("jax_batched", k)] = head
+    if backend_available("jax_pallas"):
+        from repro.selector import PallasBatchedRankState
+        p = PallasBatchedRankState(hours, mask, prices, ids)
+        p.add_state("all", rows=list(range(hours.shape[0])))
+        for k in _k_boundary_cases(C):
+            head = p.top_k("all", k)
+            assert head == p.ranking("all")[:min(k, C)], ("pallas", k)
+            heads[("jax_pallas", k)] = head
     if backend_available("jax_sharded"):
         for n_dev in [n for n in DEVICE_COUNTS if n <= N_DEVICES]:
             s = ShardedBatchedRankState(hours, mask, prices, ids,
