@@ -2,14 +2,17 @@
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows to stdout
 and mirrors them into a ``BENCH_*.json`` file (path overridable via an
-env var) that CI uploads as the perf-trajectory artifact.
+env var) that CI uploads as the perf-trajectory artifact.  Benches also
+share the gated-claims contract here: collect failed claims through
+:class:`Gates`, then :func:`check_gates` prints them to stderr and
+exits nonzero so CI fails the job.
 """
 from __future__ import annotations
 
 import json
 import os
 import sys
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Sequence
 
 
 class BenchRows:
@@ -20,10 +23,13 @@ class BenchRows:
         self.env_var = env_var
         self.default_path = default_path
 
-    def emit(self, name: str, us_per_call: float, derived: str) -> None:
-        self.rows.append({"name": name,
-                          "us_per_call": round(us_per_call, 1),
-                          "derived": derived})
+    def emit(self, name: str, us_per_call: float, derived: str,
+             **extra: Any) -> None:
+        row: Dict[str, Any] = {"name": name,
+                               "us_per_call": round(us_per_call, 1),
+                               "derived": derived}
+        row.update(extra)                 # JSON-only fields (curve data)
+        self.rows.append(row)
         print(f"{name},{us_per_call:.1f},{derived}")
 
     def write_json(self) -> None:
@@ -31,3 +37,23 @@ class BenchRows:
         with open(path, "w") as f:
             json.dump(self.rows, f, indent=2)
         print(f"# wrote {path}", file=sys.stderr)
+
+
+class Gates:
+    """Collects gated claims that failed this run."""
+
+    def __init__(self) -> None:
+        self.failures: List[str] = []
+
+    def gate(self, name: str, claim: str, ok: bool) -> None:
+        if not ok:
+            self.failures.append(f"{name}: {claim}")
+
+
+def check_gates(failures: Sequence[str]) -> None:
+    """Exit nonzero (after listing them on stderr) if any claim failed."""
+    if failures:
+        print("GATED CLAIMS FAILED:", file=sys.stderr)
+        for failure in failures:
+            print(f"  {failure}", file=sys.stderr)
+        sys.exit(1)

@@ -50,7 +50,7 @@ import time
 
 import numpy as np
 
-from _bench_io import BenchRows
+from _bench_io import BenchRows, Gates, check_gates
 from repro.core.trace import JobClass
 from repro.market import SelectionDaemon, SimulatedSpotFeed, synthetic_stream
 from repro.selector import (BatchedRankState, IdentityCatalog, JaxRankState,
@@ -63,12 +63,8 @@ emit = ROWS.emit
 write_json = ROWS.write_json
 
 #: gated claims that failed this run; main() exits nonzero on any.
-GATE_FAILURES: "list[str]" = []
-
-
-def gate(name: str, claim: str, ok: bool) -> None:
-    if not ok:
-        GATE_FAILURES.append(f"{name}: {claim}")
+GATES = Gates()
+gate = GATES.gate
 
 
 # --- incremental reprice vs full rank_dense ----------------------------------
@@ -630,11 +626,7 @@ def main(smoke: bool = False) -> None:
         bench_reprice_sharded(64, 10_000, 0.001, n_states=16)
     bench_daemon(2_000 if smoke else 10_000)
     write_json()
-    if GATE_FAILURES:
-        print("GATED CLAIMS FAILED:", file=sys.stderr)
-        for failure in GATE_FAILURES:
-            print(f"  {failure}", file=sys.stderr)
-        sys.exit(1)
+    check_gates(GATES.failures)
 
 
 if __name__ == "__main__":

@@ -46,7 +46,7 @@ import statistics
 import sys
 import time
 
-from _bench_io import BenchRows
+from _bench_io import BenchRows, Gates, check_gates
 from serve_bench import SELECTIONS, _market_text, _service, _submissions, \
     _universe
 from repro.market import RecordedPriceFeed, ServeFrontend
@@ -57,7 +57,8 @@ emit = ROWS.emit
 write_json = ROWS.write_json
 
 #: gated claims that failed this run; main() exits nonzero on any.
-GATE_FAILURES: "list[str]" = []
+GATES = Gates()
+gate = GATES.gate
 
 #: the DESIGN.md §12 instrumentation budget on the serve hot path.
 OVERHEAD_BUDGET = 0.03
@@ -66,11 +67,6 @@ OVERHEAD_BUDGET = 0.03
 N_TICKS = 8
 
 BATCH = 1_000
-
-
-def gate(name: str, claim: str, ok: bool) -> None:
-    if not ok:
-        GATE_FAILURES.append(f"{name}: {claim}")
 
 
 def _frontend(store, ids, base, market: str, subs,
@@ -179,11 +175,7 @@ def main(smoke: bool = False) -> None:
     print(f"# wrote {dump_path}", file=sys.stderr)
 
     write_json()
-    if GATE_FAILURES:
-        print("GATED CLAIMS FAILED:", file=sys.stderr)
-        for failure in GATE_FAILURES:
-            print(f"  {failure}", file=sys.stderr)
-        sys.exit(1)
+    check_gates(GATES.failures)
 
 
 if __name__ == "__main__":

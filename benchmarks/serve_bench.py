@@ -28,7 +28,7 @@ from __future__ import annotations
 import sys
 import time
 
-from _bench_io import BenchRows
+from _bench_io import BenchRows, Gates, check_gates
 from repro.core.trace import JobClass
 from repro.market import (JournalReplayer, RecordedPriceFeed,
                           SelectionDaemon, ServeFrontend, SimulatedSpotFeed,
@@ -41,7 +41,8 @@ emit = ROWS.emit
 write_json = ROWS.write_json
 
 #: gated claims that failed this run; main() exits nonzero on any.
-GATE_FAILURES: "list[str]" = []
+GATES = Gates()
+gate = GATES.gate
 
 #: modeled client-reply latency per served decision (seconds).
 LATENCY = 0.001
@@ -54,11 +55,6 @@ SELECTIONS = [
     ("j1", None), ("j2", None), ("j3", None), ("j4", None),
     ("j1", ("g2", "g3")), ("j2", ("g1",)),
 ]
-
-
-def gate(name: str, claim: str, ok: bool) -> None:
-    if not ok:
-        GATE_FAILURES.append(f"{name}: {claim}")
 
 
 # --- the shared recorded market + submission load -----------------------------
@@ -205,11 +201,7 @@ def main(smoke: bool = False) -> None:
                    tput_1w=tput_1w)
 
     write_json()
-    if GATE_FAILURES:
-        print("GATED CLAIMS FAILED:", file=sys.stderr)
-        for failure in GATE_FAILURES:
-            print(f"  {failure}", file=sys.stderr)
-        sys.exit(1)
+    check_gates(GATES.failures)
 
 
 if __name__ == "__main__":

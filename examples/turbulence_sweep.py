@@ -1,0 +1,108 @@
+"""Deviation-vs-turbulence: how selection quality degrades as the
+market gets hostile.
+
+    PYTHONPATH=src python examples/turbulence_sweep.py
+    PYTHONPATH=src python examples/turbulence_sweep.py \\
+        --backends numpy jax_batched --presets calm flash_crash
+
+How this maps to the paper
+--------------------------
+Fig. 2 sweeps *static* price structures and reports <6% mean deviation
+from the cost-optimal configuration.  This example sweeps market
+*turbulence* instead (DESIGN.md §15): the paper universe (Tables I x
+II) is re-submitted against each named `TURBULENCE_PRESETS` market —
+from ``calm`` (the bundled-fixture regime) through coordinated
+eviction storms, correlated regional spikes and flash-crash/overshoot
+regime flips, up to ``laggy_storm`` (a storm seen through a
+3-tick-stale feed).  Every cell is recorded, replayed, audited under
+the backend's ScoreContract, and scored two ways:
+
+  * **journal-judged** — deviation against the per-epoch oracle at the
+    prices the daemon was *shown* (what §8's harness reports);
+  * **truth-judged** — the same decisions re-billed at the *unlagged*
+    market state (what the cloud would actually charge).  The two
+    agree exactly on honest feeds; the gap on ``laggy_storm`` is the
+    real cost of feed staleness, invisible to an internally-consistent
+    journal.
+
+`benchmarks/turbulence_bench.py` runs this same sweep under CI gates
+and writes the machine-readable curve to ``BENCH_turbulence.json``.
+"""
+import argparse
+import sys
+
+from repro.core import costmodel, spark_sim
+from repro.core.evaluate import turbulence_curves
+from repro.market import TURBULENCE_PRESETS, run_sweep, synthetic_stream
+from repro.selector import (BACKENDS, GcpVmCatalog, PriceTable,
+                            ProfilingStore, SelectionService,
+                            backend_available)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--presets", nargs="+",
+                    default=sorted(TURBULENCE_PRESETS,
+                                   key=lambda n: TURBULENCE_PRESETS[n].level),
+                    choices=sorted(TURBULENCE_PRESETS))
+    ap.add_argument("--backends", nargs="+", default=["numpy"],
+                    choices=list(BACKENDS))
+    ap.add_argument("--events", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=11,
+                    help="market seed (the stream seed is fixed at 3, "
+                         "matching the replay harness)")
+    args = ap.parse_args()
+
+    backends = [b for b in args.backends if backend_available(b)]
+    for b in args.backends:
+        if b not in backends:
+            print(f"skipping backend {b}: unavailable", file=sys.stderr)
+    if not backends:
+        print("no requested backend is available", file=sys.stderr)
+        return 1
+
+    trace = spark_sim.generate_trace(seed=0)
+    store = ProfilingStore.from_trace(trace)
+    catalog = GcpVmCatalog(trace.configs, costmodel.LinearPriceModel())
+    base = dict(PriceTable.from_catalog(catalog).items())
+    events = list(synthetic_stream([j.name for j in trace.jobs],
+                                   args.events, seed=3,
+                                   tick_fraction=0.15))
+
+    def factory(backend):
+        return SelectionService(catalog, store,
+                                PriceTable.from_catalog(catalog),
+                                backend=backend)
+
+    points = run_sweep(factory, base, events, presets=args.presets,
+                       backends=backends, seed=args.seed)
+    if not all(p.audit_ok for p in points):
+        for p in points:
+            if not p.audit_ok:
+                print(f"AUDIT FAILED: {p.preset}/{p.backend} "
+                      f"({p.audit_mismatches} mismatches)",
+                      file=sys.stderr)
+        return 1
+
+    print(f"deviation vs turbulence ({len(points)} cells, "
+          f"{args.events} events per cell, paper's static bar: <6%):")
+    for backend, curve in turbulence_curves(points).items():
+        print(f"\n  backend {backend}:")
+        print(f"    {'preset':<18}{'level':>6}{'journal':>10}"
+              f"{'truth':>10}{'drift':>7}{'epochs':>8}")
+        for p in curve:
+            print(f"    {p.preset:<18}{p.level:>6.1f}"
+                  f"{p.mean_deviation:>10.2%}"
+                  f"{p.truth_mean_deviation:>10.2%}"
+                  f"{p.audit_drift:>7d}{p.epochs:>8d}")
+        lagged = [p for p in curve
+                  if p.truth_mean_deviation != p.mean_deviation]
+        for p in lagged:
+            print(f"    ^ {p.preset}: the journal can't see feed "
+                  f"staleness — the truth judge bills the same "
+                  f"decisions at the unlagged market")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

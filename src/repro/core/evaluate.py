@@ -324,6 +324,84 @@ def dynamic_evaluation(store: ProfilingStore, decisions: Sequence,
                              backend=backend)
 
 
+# --- deviation vs turbulence: the dynamic analogue of Fig. 2's x-axis --------
+
+@dataclasses.dataclass(frozen=True)
+class TurbulencePoint:
+    """One cell of the turbulence sweep: (preset, backend) -> deviation.
+
+    Produced by :func:`repro.market.turbulence.run_point`: a daemon run
+    over one adversarial market, its journal audited under the
+    backend's :class:`~repro.selector.ScoreContract`, then scored by
+    :func:`dynamic_evaluation`.  ``evaluation`` judges decisions
+    against the prices the daemon was shown (the journal view);
+    ``truth``, when present, re-judges them against the *unlagged*
+    market — identical for a zero-latency feed, strictly harsher when
+    the preset's ``feed_latency`` delayed the quotes.  A point whose
+    ``audit_ok`` is false carries no evidence about the selector (the
+    serving path itself diverged) and the bench gates on it.
+    """
+
+    preset: str
+    level: float
+    backend: str
+    #: how the daemon got its quotes: "recorded" | "polled" |
+    #: "simulated" — identical quote streams must produce identical
+    #: curves regardless (the ISSUE 10 acceptance bar).
+    feed_kind: str
+    evaluation: DynamicEvaluation
+    truth: Optional[DynamicEvaluation]
+    audit_ok: bool
+    audit_mismatches: int
+    audit_drift: int
+    decisions: int
+    epochs: int
+    feed_errors: int = 0
+
+    @property
+    def mean_deviation(self) -> float:
+        return self.evaluation.mean_deviation
+
+    @property
+    def truth_mean_deviation(self) -> float:
+        return self.truth.mean_deviation if self.truth is not None \
+            else math.nan
+
+    def summary(self) -> Dict[str, object]:
+        """One ``BENCH_turbulence.json`` curve row."""
+        out: Dict[str, object] = {
+            "preset": self.preset,
+            "level": self.level,
+            "backend": self.backend,
+            "feed_kind": self.feed_kind,
+            "audit_ok": self.audit_ok,
+            "audit_mismatches": self.audit_mismatches,
+            "audit_drift": self.audit_drift,
+            "epochs": self.epochs,
+            "feed_errors": self.feed_errors,
+        }
+        out.update(self.evaluation.summary())
+        if self.truth is not None:
+            out["truth_mean_deviation"] = self.truth.mean_deviation
+            out["truth_max_deviation"] = self.truth.max_deviation
+        return out
+
+
+def turbulence_curves(points: Sequence[TurbulencePoint]
+                      ) -> Mapping[str, List[TurbulencePoint]]:
+    """Group sweep points into per-backend deviation-vs-turbulence
+    curves, level-ordered — the dynamic analogue of Fig. 2's per-
+    approach lines over the price-ratio axis.  Points that share a
+    (backend, level) stay in input order (e.g. a recorded point next
+    to its polled twin)."""
+    curves: Dict[str, List[TurbulencePoint]] = {}
+    for p in points:
+        curves.setdefault(p.backend, []).append(p)
+    for backend in curves:
+        curves[backend].sort(key=lambda p: p.level)
+    return curves
+
+
 def crossover_fraction(trace: Trace, price: costmodel.LinearPriceModel,
                        steps: int = 200) -> float:
     """Misclassification fraction beyond which Fw1C beats two-class Flora."""

@@ -31,7 +31,17 @@ package makes "current" a live property instead of a one-shot argument
                :class:`JournalReplayer`: audit a decision journal against
                cold re-ranks at each reconstructed price epoch, then
                score it against per-epoch and static-price oracles
-               (DESIGN.md §8).
+               (DESIGN.md §8);
+  polling   -- :class:`PollingPriceFeed`: the live billing-API adapter —
+               any ``poller(tick) -> payload`` callable behind the typed
+               :class:`FeedError`/backoff path, with ``record_feed``
+               turning any poll into a replayable fixture
+               (DESIGN.md §15);
+  turbulence-- adversarial market generators (coordinated eviction
+               storms, correlated regional spikes, flash-crash-and-
+               recover), named :data:`TURBULENCE_PRESETS`, and the
+               deviation-vs-turbulence sweep driver
+               (:func:`run_point` / :func:`run_sweep`, DESIGN.md §15).
 """
 from repro.market.daemon import (DaemonStats, SelectionDaemon, Submission,
                                  Tick, metrics_record, synthetic_stream)
@@ -40,17 +50,27 @@ from repro.market.feed import (FeedError, MarketEvent, PriceDelta, PriceFeed,
 from repro.market.frontend import (FrontendStats, ServeFrontend, Snapshot,
                                    SnapshotEntry, merge_shards)
 from repro.market.migration import MigrationAdvice, should_migrate
+from repro.market.polling import PollingPriceFeed
 from repro.market.replay import (JournalReplayer, RecordedPriceFeed,
                                  ReplayAudit, ReplayMismatch,
                                  ReplayedDecision, record_feed)
 from repro.market.ticker import PriceTicker
+from repro.market.turbulence import (LaggedPriceFeed, TURBULENCE_PRESETS,
+                                     TurbulencePreset, TurbulentMarket,
+                                     correlated_spike_events,
+                                     eviction_storm_events,
+                                     flash_crash_events, make_market,
+                                     run_point, run_sweep)
 
 __all__ = [
     "DaemonStats", "FeedError", "FrontendStats", "JournalReplayer",
-    "MarketEvent", "MigrationAdvice", "PriceDelta", "PriceFeed",
-    "PriceTicker", "RecordedPriceFeed", "ReplayAudit", "ReplayMismatch",
-    "ReplayedDecision", "SelectionDaemon", "ServeFrontend",
-    "SimulatedSpotFeed", "Snapshot", "SnapshotEntry", "Submission", "Tick",
-    "merge_shards", "metrics_record", "record_feed", "should_migrate",
+    "LaggedPriceFeed", "MarketEvent", "MigrationAdvice", "PollingPriceFeed",
+    "PriceDelta", "PriceFeed", "PriceTicker", "RecordedPriceFeed",
+    "ReplayAudit", "ReplayMismatch", "ReplayedDecision", "SelectionDaemon",
+    "ServeFrontend", "SimulatedSpotFeed", "Snapshot", "SnapshotEntry",
+    "Submission", "TURBULENCE_PRESETS", "Tick", "TurbulencePreset",
+    "TurbulentMarket", "correlated_spike_events", "eviction_storm_events",
+    "flash_crash_events", "make_market", "merge_shards", "metrics_record",
+    "record_feed", "run_point", "run_sweep", "should_migrate",
     "synthetic_stream",
 ]

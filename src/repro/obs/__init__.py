@@ -25,8 +25,13 @@ from repro.obs.registry import (Counter, DEFAULT_LATENCY_BUCKETS, Gauge,
 #: records (and ReplayAudit.tick_latency) key their percentiles on.
 TICK_SPAN = "tick.total"
 
+#: Histogram fed by one turbulence-sweep point (daemon run + journal
+#: audit + dynamic eval, DESIGN.md §15); the ``sweep.points`` /
+#: ``sweep.decisions`` counters ride the same registry.
+SWEEP_SPAN = "sweep.point"
+
 __all__ = [
     "Counter", "DEFAULT_LATENCY_BUCKETS", "FakeClock", "Gauge", "Histogram",
-    "MetricsRegistry", "NULL_SPAN", "SYSTEM_CLOCK", "TICK_SPAN",
-    "histogram_quantile", "maybe_span",
+    "MetricsRegistry", "NULL_SPAN", "SWEEP_SPAN", "SYSTEM_CLOCK",
+    "TICK_SPAN", "histogram_quantile", "maybe_span",
 ]

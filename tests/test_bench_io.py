@@ -1,0 +1,62 @@
+"""The shared bench I/O contract (ISSUE 10 satellite).
+
+`benchmarks/_bench_io.py` now owns the gate-check/exit-nonzero logic
+that ``market_bench``/``serve_bench``/``obs_bench``/``turbulence_bench``
+previously copy-pasted: this pins the behavior CI's perf jobs depend on
+— a failed gated claim lists itself on stderr and exits the process
+with status 1, and a clean run is a silent no-op.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "benchmarks"))
+from _bench_io import BenchRows, Gates, check_gates  # noqa: E402
+
+
+def test_gates_collect_only_failed_claims():
+    gates = Gates()
+    gates.gate("row_a", "claim held", True)
+    assert gates.failures == []
+    gates.gate("row_b", "p50 under budget", False)
+    gates.gate("row_c", "audit passes", False)
+    assert gates.failures == ["row_b: p50 under budget",
+                              "row_c: audit passes"]
+
+
+def test_check_gates_is_a_noop_when_everything_held(capsys):
+    check_gates([])          # must not raise or print
+    out = capsys.readouterr()
+    assert out.err == "" and out.out == ""
+
+
+def test_check_gates_exits_nonzero_listing_every_failure(capsys):
+    with pytest.raises(SystemExit) as exc:
+        check_gates(["row_b: p50 under budget", "row_c: audit passes"])
+    assert exc.value.code == 1
+    err = capsys.readouterr().err
+    assert "GATED CLAIMS FAILED:" in err
+    assert "row_b: p50 under budget" in err
+    assert "row_c: audit passes" in err
+
+
+def test_benchrows_extra_fields_land_in_json_not_csv(tmp_path, capsys,
+                                                     monkeypatch):
+    path = tmp_path / "BENCH_x.json"
+    monkeypatch.setenv("BENCH_X_JSON", str(path))
+    rows = BenchRows("BENCH_X_JSON", "unused.json")
+    rows.emit("point_a", 12.34, "ok=True",
+              curve=[{"level": 0.0, "mean_deviation": 0.05}])
+    rows.emit("point_b", 5.0, "ok=True")
+    rows.write_json()
+    # the CSV line is the stable three-column shape, extras JSON-only
+    out = capsys.readouterr().out.splitlines()
+    assert out[0] == "point_a,12.3,ok=True"
+    assert "curve" not in out[0]
+    data = json.loads(path.read_text())
+    assert data[0]["curve"] == [{"level": 0.0, "mean_deviation": 0.05}]
+    assert data[0]["us_per_call"] == 12.3
+    assert "curve" not in data[1]

@@ -31,7 +31,7 @@ import pytest
 from repro.core.trace import JobClass
 from repro.market import (JournalReplayer, MarketEvent, RecordedPriceFeed,
                           SelectionDaemon, SimulatedSpotFeed, Submission,
-                          Tick, record_feed)
+                          Tick, make_market, record_feed)
 from repro.selector import (FLEET_BACKENDS, IdentityCatalog, PriceTable,
                             ProfilingStore, SelectionService,
                             backend_available)
@@ -97,32 +97,13 @@ def _recorded_market(ids):
     return feed, base
 
 
-@pytest.mark.parametrize("backend,serve_top_k", [
-    ("numpy", None),
-    ("jax_batched", None),
-    ("jax_batched", 3),
-    ("jax_sharded", None),
-    ("jax_sharded", 3),
-])
-def test_daemon_soak_long_recorded_market(backend, serve_top_k):
-    if not backend_available(backend):
-        pytest.skip("jax not installed")
-    store, ids = _soak_store()
-    feed, base = _recorded_market(ids)
-    svc = SelectionService(IdentityCatalog(ids), store, PriceTable(base),
-                           backend=backend, serve_top_k=serve_top_k)
-    daemon = SelectionDaemon(svc, feed)
-    stats = daemon.run(_soak_stream())
-
-    # -- the stream actually stressed what it claims to stress
-    assert stats.ticks == N_TICKS
-    assert stats.epochs >= 180            # near-every tick moved prices
-    assert stats.rejected == 0
-    assert stats.decisions == stats.submissions >= 140
-    if backend in FLEET_BACKENDS:
-        assert svc._batched is not None
-        assert svc._batched.n_active == len(SOAK_SELECTIONS)
-
+def _assert_soak_invariants(svc, store, daemon, stats, backend,
+                            serve_top_k=None):
+    """The shared soak bar: audit clean with zero out-of-envelope
+    drift, store growth amortized-doubling-bounded, every selection
+    cold-builds exactly once, and the fleet backends spend exactly one
+    kernel dispatch per price epoch — the same invariants for the calm
+    recorded market and the hostile turbulence presets."""
     # -- the audit: tolerance mode for the batched fleet, bit-identical
     #    for numpy; zero out-of-envelope drift either way
     replayer = JournalReplayer(store, daemon.journal_dump())
@@ -167,6 +148,65 @@ def test_daemon_soak_long_recorded_market(backend, serve_top_k):
     else:
         # per-state backends pay one update per live state per epoch
         assert svc.reprice_dispatches >= stats.epochs
+    return audit
+
+
+@pytest.mark.parametrize("backend,serve_top_k", [
+    ("numpy", None),
+    ("jax_batched", None),
+    ("jax_batched", 3),
+    ("jax_sharded", None),
+    ("jax_sharded", 3),
+])
+def test_daemon_soak_long_recorded_market(backend, serve_top_k):
+    if not backend_available(backend):
+        pytest.skip("jax not installed")
+    store, ids = _soak_store()
+    feed, base = _recorded_market(ids)
+    svc = SelectionService(IdentityCatalog(ids), store, PriceTable(base),
+                           backend=backend, serve_top_k=serve_top_k)
+    daemon = SelectionDaemon(svc, feed)
+    stats = daemon.run(_soak_stream())
+
+    # -- the stream actually stressed what it claims to stress
+    assert stats.ticks == N_TICKS
+    assert stats.epochs >= 180            # near-every tick moved prices
+    assert stats.rejected == 0
+    assert stats.decisions == stats.submissions >= 140
+    if backend in FLEET_BACKENDS:
+        assert svc._batched is not None
+        assert svc._batched.n_active == len(SOAK_SELECTIONS)
+
+    _assert_soak_invariants(svc, store, daemon, stats, backend,
+                            serve_top_k)
+
+
+@pytest.mark.parametrize("preset_name", ["eviction_storm", "flash_crash"])
+@pytest.mark.parametrize("backend", ["numpy", "jax_batched"])
+def test_daemon_soak_hostile_turbulent_market(preset_name, backend):
+    """ISSUE 10 satellite: the 220-tick soak under the hostile
+    turbulence presets — coordinated eviction storms and flash-crash/
+    overshoot regime flips are exactly the markets that punish a
+    selector amortizing rankings between ticks, and the soak bar
+    (clean audit, pinned realloc/cache/dispatch bounds) must hold there
+    too, not just under the calm recorded market."""
+    if not backend_available(backend):
+        pytest.skip("jax not installed")
+    store, ids = _soak_store()
+    base = {c: 1.0 + (i * 11 % 17) for i, c in enumerate(ids)}
+    market = make_market(preset_name, base, seed=42, ticks=N_TICKS)
+    feed = RecordedPriceFeed.loads(record_feed(market.raw, N_TICKS))
+    assert feed.ticks == N_TICKS
+    svc = SelectionService(IdentityCatalog(ids), store, PriceTable(base),
+                           backend=backend)
+    daemon = SelectionDaemon(svc, feed)
+    stats = daemon.run(_soak_stream())
+
+    assert stats.ticks == N_TICKS
+    assert stats.epochs >= 180            # hostile != quiet: prices move
+    assert stats.rejected == 0
+    assert stats.decisions == stats.submissions >= 140
+    _assert_soak_invariants(svc, store, daemon, stats, backend)
 
 
 def test_soak_journal_is_deterministic():
